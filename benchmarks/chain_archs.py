@@ -1,0 +1,76 @@
+"""Paper Tables 2-4 (+ beyond-paper LM transfer): the optimal DPQE chain on
+every model family.
+
+CNN side (the paper's own): ResNet / VGG / MobileNetV2 CIFAR-style configs
+on the synthetic image task.  LM side (beyond paper): the chain applied to a
+reduced tinyllama and mixtral (expert pruning) on the synthetic token task —
+demonstrating that the sequence law is architecture-agnostic, which is the
+transferable claim of the paper.
+
+Usage: PYTHONPATH=src python -m benchmarks.chain_archs [--steps 120]
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+
+from benchmarks import common
+from repro.configs import get_smoke_config
+from repro.configs.cnn import (MOBILENET_SMALL_CIFAR, RESNET8_CIFAR,
+                               VGG8_CIFAR)
+from repro.core.chain import run_chain
+from repro.core.family import LMFamily
+from repro.core.passes import Trainer, init_chain_state
+from repro.data import SyntheticTokens
+
+
+def run_cnn(steps=120):
+    fam = common.make_family()
+    tr = common.make_trainer(steps)
+    out = {}
+    for cfg in (RESNET8_CIFAR, VGG8_CIFAR, MOBILENET_SMALL_CIFAR):
+        base = init_chain_state(fam, cfg, jax.random.key(0), tr,
+                                pretrain_steps=steps * 3)
+        _, st = common.chain_samples(fam, tr, base, 'DPQE',
+                                     common.DEFAULT_HPS)
+        out[cfg.name] = {'history': st.history}
+        h0, h1 = st.history[0], st.history[-1]
+        print(f"{cfg.name}: acc {h0['acc']:.3f} -> {h1['acc']:.3f}, "
+              f"BitOpsCR {h1['BitOpsCR']:.0f}x, CR {h1['CR']:.1f}x")
+    common.save_json('chain_cnn_archs.json', out)
+    return out
+
+
+def run_lm(steps=60):
+    out = {}
+    for arch, seq_hps in (
+            ('tinyllama-1.1b', {'P': {'ratio': 0.3}}),
+            ('mixtral-8x7b', {'P': {'ratio': 0.5}})):     # expert pruning
+        cfg = get_smoke_config(arch, layers=4).replace(vocab_size=256)
+        fam = LMFamily(SyntheticTokens(vocab=cfg.vocab_size), seq=64)
+        tr = Trainer(batch=16, steps=steps, lr=2e-3, eval_n=1,
+                     eval_batch=64)
+        base = init_chain_state(fam, cfg, jax.random.key(0), tr,
+                                pretrain_steps=steps * 3)
+        hps = dict(common.DEFAULT_HPS)
+        hps.update(seq_hps)
+        hps['Q'] = {'w_bits': 8, 'a_bits': 8}
+        st = run_chain(fam, None, 'DPQE', hps, tr, state=base)
+        out[arch] = {'history': st.history}
+        h0, h1 = st.history[0], st.history[-1]
+        print(f"{arch}: acc {h0['acc']:.3f} -> {h1['acc']:.3f}, "
+              f"BitOpsCR {h1['BitOpsCR']:.0f}x, CR {h1['CR']:.1f}x")
+    common.save_json('chain_lm_archs.json', out)
+    return out
+
+
+if __name__ == '__main__':
+    ap = argparse.ArgumentParser()
+    ap.add_argument('--steps', type=int, default=120)
+    ap.add_argument('--lm-steps', type=int, default=60)
+    ap.add_argument('--skip-lm', action='store_true')
+    args = ap.parse_args()
+    run_cnn(args.steps)
+    if not args.skip_lm:
+        run_lm(args.lm_steps)

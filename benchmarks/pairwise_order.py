@@ -1,0 +1,79 @@
+"""Paper Figs. 6-11: pairwise order experiments A->B vs B->A.
+
+For every pair of passes, run both orders from a shared trained baseline
+across a small hyperparameter grid, collect (accuracy, BitOpsCR) samples,
+decide the winning order by Pareto-frontier score, and feed the edges to
+the OrderPlanner's topological sort.  The run validates the paper's claim
+that the resulting DAG is acyclic with the unique sorting D->P->Q->E.
+
+Usage: PYTHONPATH=src python -m benchmarks.pairwise_order [--steps 120]
+"""
+from __future__ import annotations
+
+import argparse
+import itertools
+
+from benchmarks import common
+from repro.core.planner import OrderPlanner, compare_orders
+
+GRIDS = {
+    'D': [{'factor': 0.75, 'temp': 2.0, 'alpha': 0.5}],
+    'P': [{'ratio': 0.4}],
+    'Q': [{'w_bits': 4, 'a_bits': 8}],
+    'E': [{'threshold': 0.85}],
+}
+
+WIDE_GRIDS = {                       # --wide: the paper's fuller sweep
+    'D': [{'factor': 0.5}, {'factor': 0.35}],
+    'P': [{'ratio': 0.3}, {'ratio': 0.5}],
+    'Q': [{'w_bits': 2, 'a_bits': 8}, {'w_bits': 4, 'a_bits': 8}],
+    'E': [{'threshold': 0.85}],
+}
+
+
+def run(steps=120, pairs=None, wide=False):
+    global GRIDS
+    if wide:
+        GRIDS = WIDE_GRIDS
+    fam = common.make_family()
+    tr = common.make_trainer(steps)
+    base = common.baseline(fam, tr, pretrain_steps=steps * 3)
+    planner = OrderPlanner('DPQE')
+    results = {}
+    pairs = pairs or list(itertools.combinations('DPQE', 2))
+    for a, b in pairs:
+        samples = {'AB': [], 'BA': []}
+        for hp_a in GRIDS[a]:
+            for hp_b in GRIDS[b]:
+                hps = {a: hp_a, b: hp_b}
+                s_ab, _ = common.chain_samples(fam, tr, base, a + b, hps)
+                s_ba, _ = common.chain_samples(fam, tr, base, b + a, hps)
+                samples['AB'] += s_ab
+                samples['BA'] += s_ba
+        winner, score_ab, score_ba = compare_orders(samples['AB'],
+                                                    samples['BA'])
+        order = a + b if winner == 'AB' else b + a
+        planner.add_pairwise(a, b, winner, abs(score_ab - score_ba))
+        results[a + b] = {'winner': order, 'score_' + a + b: score_ab,
+                          'score_' + b + a: score_ba,
+                          'samples_' + a + b: samples['AB'],
+                          'samples_' + b + a: samples['BA']}
+        print(f'pair {a}{b}: winner {order} '
+              f'(score {score_ab:.4f} vs {score_ba:.4f})')
+    dropped = planner.resolve_cycles()
+    topo = planner.topological_order()
+    print('topological order:', topo,
+          f'(dropped weak edges: {dropped})' if dropped else '(acyclic)')
+    results['topological_order'] = topo
+    results['dropped_edges'] = dropped
+    results['baseline_acc'] = base.history[0]['acc']
+    common.save_json('pairwise_order.json', results)
+    return results
+
+
+if __name__ == '__main__':
+    ap = argparse.ArgumentParser()
+    ap.add_argument('--steps', type=int, default=120)
+    ap.add_argument('--wide', action='store_true')
+    args = ap.parse_args()
+    run(args.steps, wide=args.wide)

@@ -1,0 +1,65 @@
+"""Paper Sec. 6 / Fig. 14: repeating a compression after the optimal chain.
+
+Compares (a) one aggressive application of P/Q vs two mild repeats, and
+(b) the DPQE chain followed by a repeated P or Q — validating the paper's
+finding that repetition does not beat the optimal single-pass sequence
+(except continuous Q, which trades accuracy).
+
+Usage: PYTHONPATH=src python -m benchmarks.repeat_compression [--steps 100]
+"""
+from __future__ import annotations
+
+import argparse
+
+from benchmarks import common
+from repro.core.passes import PASSES
+
+
+def run(steps=100):
+    fam = common.make_family()
+    tr = common.make_trainer(steps)
+    base = common.baseline(fam, tr, pretrain_steps=steps * 3)
+    out = {}
+
+    def metrics_of(st, label):
+        h = st.history[-1]
+        out[label] = {'acc': h['acc'], 'BitOpsCR': h['BitOpsCR']}
+        print(f"{label:14s} acc={h['acc']:.3f} BitOpsCR={h['BitOpsCR']:.1f}x")
+
+    # single-pass aggressive vs mild repeated: pruning
+    _, st = common.chain_samples(fam, tr, base, 'P', {'P': {'ratio': 0.6}})
+    metrics_of(st, 'P_aggressive')
+    _, st = common.chain_samples(fam, tr, base, 'PP', {'P': {'ratio': 0.37}})
+    metrics_of(st, 'P_repeated')
+
+    # quantization
+    _, st = common.chain_samples(fam, tr, base, 'Q',
+                                 {'Q': {'w_bits': 2, 'a_bits': 8}})
+    metrics_of(st, 'Q_aggressive')
+    _, st = common.chain_samples(fam, tr, base, 'QQ',
+                                 {'Q': {'w_bits': 4, 'a_bits': 8}})
+    # second Q re-runs at 2 bits
+    st = PASSES['Q'].apply(st, {'w_bits': 2, 'a_bits': 8}, tr)
+    st.metrics(tr, 'Q2')
+    metrics_of(st, 'Q_repeated')
+
+    # DPQE then repeat P / Q
+    _, chain = common.chain_samples(fam, tr, base, 'DPQE',
+                                    common.DEFAULT_HPS)
+    metrics_of(chain, 'DPQE')
+    st = PASSES['P'].apply(chain, {'ratio': 0.2}, tr)
+    st.metrics(tr, 'DPQE+P')
+    metrics_of(st, 'DPQE_repeatP')
+    st = PASSES['Q'].apply(chain, {'w_bits': 1, 'a_bits': 8}, tr)
+    st.metrics(tr, 'DPQE+Q')
+    metrics_of(st, 'DPQE_repeatQ')
+
+    common.save_json('repeat_compression.json', out)
+    return out
+
+
+if __name__ == '__main__':
+    ap = argparse.ArgumentParser()
+    ap.add_argument('--steps', type=int, default=100)
+    args = ap.parse_args()
+    run(args.steps)

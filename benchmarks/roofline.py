@@ -1,0 +1,139 @@
+"""Roofline analysis from the dry-run artifacts (deliverable g).
+
+Per (arch x shape x mesh) cell:
+    compute term    = HLO_FLOPs_per_device / peak_FLOPs_per_chip
+    memory term     = 2 x HLO_buffer_bytes_per_device / HBM_bw   (r+w proxy)
+    collective term = collective_bytes_per_device / ICI_link_bw
+plus the dominant term, MODEL_FLOPS (6ND / 2ND), and the
+MODEL_FLOPS / HLO_FLOPs usefulness ratio (catches remat/redundancy waste).
+
+Hardware constants: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI.  Methodology notes: the per-device numbers come from the
+CPU-backend SPMD module (bf16 dots promoted to f32 -> bytes are an upper
+bound; see launch/hlo_analysis.py docstring).
+
+Usage: PYTHONPATH=src python -m benchmarks.roofline [--mesh pod]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+HBM_PER_CHIP = 16e9          # v5e
+
+SHAPE_TOKENS = {'train_4k': (256, 4096, 'train'),
+                'prefill_32k': (32, 32768, 'prefill'),
+                'decode_32k': (128, 32768, 'decode'),
+                'long_500k': (1, 524288, 'decode')}
+
+
+def active_param_count(cfg):
+    """N (active) from abstract shapes; MoE routed experts scaled by
+    (top_k/ n_experts); embedding table excluded, unembed matmul included."""
+    import jax
+    from repro.models import build_model
+    p = jax.eval_shape(lambda: build_model(cfg).init(jax.random.key(0)))
+    total = 0
+    for path, leaf in jax.tree_util.tree_flatten_with_path(p)[0]:
+        keys = [str(getattr(q, 'key', getattr(q, 'idx', q))) for q in path]
+        n = 1
+        for d in leaf.shape:
+            n *= d
+        if 'embed' in keys and 'exit' not in keys:
+            if 'unembed' in keys:
+                total += n
+            continue                       # lookup, not matmul
+        if 'moe' in keys and keys[-1] in ('wi', 'wg', 'wo'):
+            E = cfg.n_experts
+            n = n * cfg.top_k / E
+        total += int(n)
+    if cfg.tie_embeddings:
+        total += cfg.vocab_size * cfg.d_model      # unembed matmul reuse
+    return total
+
+
+def model_flops(cfg, shape):
+    B, S, kind = SHAPE_TOKENS[shape]
+    N = active_param_count(cfg)
+    if kind == 'train':
+        return 6.0 * N * B * S
+    if kind == 'prefill':
+        return 2.0 * N * B * S
+    return 2.0 * N * B                      # decode: one token per sequence
+
+
+def analyze_cell(path, cfg_cache):
+    from repro.configs import get_config
+    with open(path) as f:
+        r = json.load(f)
+    cfg = cfg_cache.setdefault(r['arch'], get_config(r['arch']))
+    chips = r['devices']
+    t_c = r['flops_per_device'] / PEAK_FLOPS
+    # memory term: intermediate buffers (written+read) + argument reads
+    # (params + caches — the dtype-accurate memory_analysis numbers; this is
+    # what the int8-serving iteration moves)
+    t_m = (2.0 * r['bytes_per_device']
+           + r['memory']['argument_bytes']) / HBM_BW
+    coll = sum(r['collective_bytes'].values())
+    t_x = coll / ICI_BW
+    dom = max((('compute', t_c), ('memory', t_m), ('collective', t_x)),
+              key=lambda kv: kv[1])[0]
+    mf = model_flops(cfg, r['shape'])
+    hlo_global = r['flops_per_device'] * chips
+    mem = r['memory']
+    hbm_need = mem['argument_bytes'] + mem['temp_bytes'] \
+        + mem['output_bytes'] - mem.get('alias_bytes', 0)
+    return {
+        'arch': r['arch'], 'shape': r['shape'], 'mesh': r['mesh'],
+        'chips': chips,
+        'compute_s': t_c, 'memory_s': t_m, 'collective_s': t_x,
+        'dominant': dom,
+        'model_flops': mf, 'hlo_flops_global': hlo_global,
+        'useful_ratio': mf / hlo_global if hlo_global else 0.0,
+        'hbm_bytes_per_device': hbm_need,
+        'fits_hbm': hbm_need <= HBM_PER_CHIP,
+        'collective_by_kind': r['collective_bytes'],
+        'compile_s': r.get('compile_s'),
+    }
+
+
+def main(mesh='pod', out_dir='experiments/dryrun'):
+    d = os.path.join(out_dir, mesh)
+    cfg_cache = {}
+    rows = []
+    for fn in sorted(os.listdir(d)):
+        if not fn.endswith('.json') or '__' not in fn:
+            continue
+        shape_part = fn[:-5].split('__')[1]
+        if shape_part not in SHAPE_TOKENS:          # skip tagged variants
+            continue
+        rows.append(analyze_cell(os.path.join(d, fn), cfg_cache))
+    hdr = ('| arch | shape | compute s | memory s | collective s | dominant '
+           '| useful (6ND/HLO) | HBM/dev GB | fits |')
+    sep = '|' + '---|' * 9
+    lines = [hdr, sep]
+    for r in rows:
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['compute_s']:.3f} "
+            f"| {r['memory_s']:.3f} | {r['collective_s']:.3f} "
+            f"| **{r['dominant']}** | {r['useful_ratio']:.2f} "
+            f"| {r['hbm_bytes_per_device'] / 1e9:.1f} "
+            f"| {'y' if r['fits_hbm'] else 'N'} |")
+    table = '\n'.join(lines)
+    print(table)
+    with open(f'experiments/roofline_{mesh}.md', 'w') as f:
+        f.write(table + '\n')
+    with open(f'experiments/roofline_{mesh}.json', 'w') as f:
+        json.dump(rows, f, indent=1)
+    return rows
+
+
+if __name__ == '__main__':
+    ap = argparse.ArgumentParser()
+    ap.add_argument('--mesh', default='pod')
+    args = ap.parse_args()
+    main(args.mesh)

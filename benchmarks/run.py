@@ -1,0 +1,159 @@
+"""Benchmark harness: one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV.  Each entry times the computational
+primitive behind a paper artifact and reports the paper-relevant derived
+metric next to it.  The full experiment *sweeps* (which train many models)
+live in benchmarks/pairwise_order.py, sequence_law.py, chain_archs.py and
+write JSON consumed by EXPERIMENTS.md; this harness is the fast,
+deterministic timing pass.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+ROWS = []
+
+
+def bench(name, fn, *args, derived='', warmup=2, iters=8):
+    out = None
+    for _ in range(warmup):
+        out = fn(*args)
+        if out is not None:
+            jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+        if out is not None:
+            jax.block_until_ready(out)
+    us = (time.perf_counter() - t0) / iters * 1e6
+    ROWS.append((name, us, derived))
+    print(f'{name},{us:.1f},{derived}')
+    return out
+
+
+def table1_sequence_law():
+    """Primitive: one fine-tune step of the chain (resnet8); derived: the
+    DPQE BitOpsCR bound from the cost model at the default chain hps."""
+    from repro.configs.cnn import RESNET8_CIFAR
+    from repro.core import bitops as bo
+    from repro.core.family import CNNFamily
+    from repro.data import SyntheticImages
+    fam = CNNFamily(SyntheticImages())
+    params = fam.init(jax.random.key(0), RESNET8_CIFAR)
+    batch = fam.train_batch(jax.random.key(1), 64)
+    grad = jax.jit(jax.grad(lambda p: fam.loss(p, RESNET8_CIFAR, batch)[0]))
+    base = bo.cnn_bitops(RESNET8_CIFAR)
+    dpqe = fam.bitops(RESNET8_CIFAR.replace(w_bits=2, a_bits=8,
+                                            exit_stages=(1,)),
+                      exit_probs={1: 0.5}, prune_scale=0.7)
+    bench('table1_chain_finetune_step', grad, params,
+          derived=f'DPQE_model_BitOpsCR={base / dpqe:.0f}x')
+
+
+def tables234_cnn_forward():
+    """Primitive: forward pass of each CNN family at CIFAR shape."""
+    from repro.configs.cnn import (MOBILENET_SMALL_CIFAR, RESNET8_CIFAR,
+                                   VGG8_CIFAR)
+    from repro.core import bitops as bo
+    from repro.models.cnn import cnn_forward, init_cnn
+    x = jax.random.normal(jax.random.key(0), (64, 32, 32, 3))
+    for cfg in (RESNET8_CIFAR, VGG8_CIFAR, MOBILENET_SMALL_CIFAR):
+        p = init_cnn(jax.random.key(0), cfg)
+        f = jax.jit(lambda p, x, c=cfg: cnn_forward(p, c, x))
+        bench(f'table234_forward_{cfg.kind}', f, p, x,
+              derived=f'MACs={bo.cnn_bitops(cfg) / (32 * 32):.3g}')
+
+
+def fig15_per_stage_costs():
+    """Derived-only: BitOpsCR after each stage of the optimal chain, from
+    the cost model (the measured curve comes from chain_archs.py)."""
+    from repro.configs.cnn import RESNET8_CIFAR
+    from repro.core import bitops as bo
+    cfg = RESNET8_CIFAR
+    base = bo.cnn_bitops(cfg)
+    crs = [2.0]                                          # D: depth/2 student
+    crs.append(crs[-1] / 0.7)                            # P: 30% channels
+    crs.append(base * 2 / 0.7
+               / bo.cnn_bitops(cfg.replace(w_bits=2, a_bits=8)))
+    crs.append(base * 2 / 0.7
+               / bo.cnn_bitops(cfg.replace(w_bits=2, a_bits=8,
+                                           exit_stages=(1,)),
+                               exit_probs={1: 0.5}))
+    d = '|'.join(f'{c:.0f}x' for c in crs)
+    ROWS.append(('fig15_stage_crs', 0.0, d))
+    print(f'fig15_stage_crs,0.0,{d}')
+
+
+def kernel_benchmarks():
+    """Kernels vs their oracles (ref on CPU; Pallas compiles for TPU)."""
+    from repro.kernels import ref
+    k = jax.random.key(0)
+    xq = jax.random.randint(k, (256, 1024), -128, 128, jnp.int8)
+    wq = jax.random.randint(jax.random.fold_in(k, 1), (1024, 512),
+                            -128, 128, jnp.int8)
+    sx = jnp.full((256,), 0.01)
+    sw = jnp.full((512,), 0.01)
+    f = jax.jit(ref.quant_matmul_ref)
+    bench('kernel_quant_matmul_ref', f, xq, wq, sx, sw,
+          derived='int8_256x1024x512')
+    w = jax.random.normal(k, (2048, 2048))
+    g = jax.jit(lambda w: ref.fake_quant_ref(w, 8))
+    bench('kernel_fake_quant_ref', g, w, derived='8bit_2048x2048')
+    q = jax.random.normal(k, (4, 16, 128))
+    kk = jax.random.normal(k, (4, 2048, 8, 128))
+    vv = jax.random.normal(k, (4, 2048, 8, 128))
+    valid = jnp.ones((4, 2048), bool)
+    h = jax.jit(ref.decode_attention_ref)
+    bench('kernel_decode_attn_ref', h, q, kk, vv, valid,
+          derived='B4_S2048_H16')
+
+
+def serving_and_training_steps():
+    """Train-step and decode-step latency for a reduced LM config."""
+    from repro.configs import get_smoke_config
+    from repro.models import build_model
+    cfg = get_smoke_config('tinyllama-1.1b', layers=4)
+    m = build_model(cfg)
+    params = m.init(jax.random.key(0))
+    batch = {'tokens': jax.random.randint(jax.random.key(1), (4, 128), 0,
+                                          cfg.vocab_size)}
+    lossf = jax.jit(jax.grad(lambda p: jnp.mean(
+        m.forward(p, batch).astype(jnp.float32))))
+    bench('lm_train_grad_step', lossf, params, derived='4x128_smoke')
+    _, cache = jax.jit(lambda p, b: m.prefill(p, b, max_len=256))(params,
+                                                                  batch)
+    tok = jnp.zeros((4,), jnp.int32)
+    dec = jax.jit(lambda p, t, c: m.decode_step(p, t, jnp.asarray(128), c)[0])
+    bench('lm_decode_step', dec, params, tok, cache, derived='B4_ctx128')
+
+
+def checkpoint_roundtrip():
+    import tempfile
+    from repro.checkpoint import save_checkpoint, load_checkpoint
+    tree = {'w': jnp.zeros((1024, 1024)), 'b': jnp.zeros((1024,))}
+    d = tempfile.mkdtemp()
+
+    def save():
+        save_checkpoint(d, 0, tree)
+    bench('checkpoint_save_4MB', save, derived='atomic_npz')
+
+    def load():
+        return load_checkpoint(d, 0, tree)[0]['w']
+    bench('checkpoint_load_4MB', load, derived='')
+
+
+def main() -> None:
+    print('name,us_per_call,derived')
+    table1_sequence_law()
+    tables234_cnn_forward()
+    fig15_per_stage_costs()
+    kernel_benchmarks()
+    serving_and_training_steps()
+    checkpoint_roundtrip()
+
+
+if __name__ == '__main__':
+    main()

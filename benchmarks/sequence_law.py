@@ -1,0 +1,46 @@
+"""Paper Table 1: BitOpsCR of all distillation-started sequences.
+
+Runs DPQE, DQPE, DPEQ, DQEP, DEPQ, DEQP from one shared baseline and
+reports the max BitOpsCR under accuracy-loss budgets (<=0.2/0.6/1/2%),
+validating that the sequence-law order DPQE dominates and near-law orders
+(DQPE) come second.
+
+Usage: PYTHONPATH=src python -m benchmarks.sequence_law [--steps 120]
+"""
+from __future__ import annotations
+
+import argparse
+
+from benchmarks import common
+
+SEQUENCES = ('DPQE', 'DQPE', 'DPEQ', 'DQEP', 'DEPQ', 'DEQP')
+BUDGETS = (0.01, 0.02, 0.05, 0.10, 0.20)
+
+
+def run(steps=120, sequences=SEQUENCES):
+    fam = common.make_family()
+    tr = common.make_trainer(steps)
+    base = common.baseline(fam, tr, pretrain_steps=steps * 3)
+    base_acc = base.history[0]['acc']
+    table = {}
+    for seq in sequences:
+        samples, st = common.chain_samples(fam, tr, base, seq,
+                                           common.DEFAULT_HPS)
+        row = {}
+        for b in BUDGETS:
+            ok = [cr for acc, cr in samples if acc >= base_acc - b]
+            row[f'<={b * 100:.1f}%'] = max(ok) if ok else None
+        table[seq] = {'budget_crs': row, 'samples': samples,
+                      'history': st.history}
+        print(seq, {k: (f'{v:.0f}x' if v else '-')
+                    for k, v in row.items()})
+    out = {'baseline_acc': base_acc, 'table': table}
+    common.save_json('sequence_law.json', out)
+    return out
+
+
+if __name__ == '__main__':
+    ap = argparse.ArgumentParser()
+    ap.add_argument('--steps', type=int, default=120)
+    args = ap.parse_args()
+    run(args.steps)

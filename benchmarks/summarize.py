@@ -1,0 +1,112 @@
+"""Build the EXPERIMENTS.md §Paper-results + §Perf tables from artifacts.
+
+Usage: PYTHONPATH=src python -m benchmarks.summarize
+Writes experiments/summary.md (pasted into EXPERIMENTS.md).
+"""
+from __future__ import annotations
+
+import json
+import os
+
+PAPER = 'experiments/paper'
+DRY = 'experiments/dryrun/pod'
+
+
+def _load(name):
+    p = os.path.join(PAPER, name)
+    if os.path.exists(p):
+        with open(p) as f:
+            return json.load(f)
+    return None
+
+
+def _cell(tagged):
+    p = os.path.join(DRY, tagged + '.json')
+    if not os.path.exists(p):
+        return None
+    with open(p) as f:
+        r = json.load(f)
+    coll = sum(r['collective_bytes'].values())
+    return {'flops': r['flops_per_device'],
+            'compute_s': r['flops_per_device'] / 197e12,
+            'bytes': r['bytes_per_device'],
+            'args_gb': r['memory']['argument_bytes'] / 1e9,
+            'mem_s': (2 * r['bytes_per_device']
+                      + r['memory']['argument_bytes']) / 819e9,
+            'coll_s': coll / 50e9}
+
+
+def main():
+    out = []
+    pw = _load('pairwise_order.json')
+    if pw:
+        out.append('### Pairwise order experiments (Figs. 6-11)\n')
+        out.append('| pair | winner | score A->B | score B->A |')
+        out.append('|---|---|---|---|')
+        import itertools
+        for a, b in itertools.combinations('DPQE', 2):
+            r = pw.get(a + b)
+            if r:
+                out.append(f"| {a}{b} | **{r['winner']}** "
+                           f"| {r['score_' + a + b]:.4f} "
+                           f"| {r['score_' + b + a]:.4f} |")
+        out.append(f"\ntopological order: **{pw['topological_order']}**"
+                   f" (dropped weak edges: {pw.get('dropped_edges')})\n")
+    sl = _load('sequence_law.json')
+    if sl:
+        out.append('### Sequence law (Table 1)\n')
+        budgets = list(next(iter(sl['table'].values()))['budget_crs'])
+        out.append('| sequence | ' + ' | '.join(budgets) + ' |')
+        out.append('|---' * (len(budgets) + 1) + '|')
+        for seq, row in sl['table'].items():
+            cells = [f'{v:.0f}x' if v else '-'
+                     for v in row['budget_crs'].values()]
+            out.append(f'| {seq} | ' + ' | '.join(cells) + ' |')
+        out.append(f"\nbaseline accuracy {sl['baseline_acc']:.3f}\n")
+    for name, title in [('chain_cnn_archs.json',
+                         'Full chain on CNN families (Tables 2-4)'),
+                        ('chain_lm_archs.json',
+                         'Full chain transferred to LMs (beyond paper)')]:
+        ca = _load(name)
+        if ca:
+            out.append(f'### {title}\n')
+            out.append('| model | baseline acc | final acc | BitOpsCR | CR |')
+            out.append('|---|---|---|---|---|')
+            for model, d in ca.items():
+                h0, h1 = d['history'][0], d['history'][-1]
+                out.append(f"| {model} | {h0['acc']:.3f} | {h1['acc']:.3f} "
+                           f"| {h1['BitOpsCR']:.0f}x | {h1['CR']:.1f}x |")
+            out.append('')
+    rp = _load('repeat_compression.json')
+    if rp:
+        out.append('### Repeating compression (Fig. 14)\n')
+        out.append('| variant | acc | BitOpsCR |')
+        out.append('|---|---|---|')
+        for k, v in rp.items():
+            out.append(f"| {k} | {v['acc']:.3f} | {v['BitOpsCR']:.1f}x |")
+        out.append('')
+
+    out.append('### §Perf cells (final, consistent measurement)\n')
+    rows = [
+        ('mixtral train_4k baseline', 'mixtral-8x7b__train_4k_base3'),
+        ('mixtral train_4k EP', 'mixtral-8x7b__train_4k'),
+        ('deepseek train_4k baseline', 'deepseek-v3-671b__train_4k_base3'),
+        ('deepseek train_4k EP(a2a)', 'deepseek-v3-671b__train_4k'),
+        ('qwen2 decode_32k baseline', 'qwen2-72b__decode_32k'),
+        ('qwen2 decode_32k int8-KV', 'qwen2-72b__decode_32k_opt7_kv8'),
+    ]
+    out.append('| cell | compute s | memory s | collective s | args GB |')
+    out.append('|---|---|---|---|---|')
+    for label, tag in rows:
+        c = _cell(tag)
+        if c:
+            out.append(f"| {label} | {c['compute_s']:.3f} | {c['mem_s']:.3f}"
+                       f" | {c['coll_s']:.3f} | {c['args_gb']:.2f} |")
+    text = '\n'.join(out) + '\n'
+    with open('experiments/summary.md', 'w') as f:
+        f.write(text)
+    print(text)
+
+
+if __name__ == '__main__':
+    main()

@@ -1,0 +1,38 @@
+"""Architecture config registry.
+
+``get_config(name)`` returns the full published config;
+``get_smoke_config(name)`` returns the reduced CPU-testable variant.
+"""
+from __future__ import annotations
+
+from repro.configs.base import ModelConfig, reduced
+
+from repro.configs.gemma2_9b import CONFIG as _gemma2_9b
+from repro.configs.gemma3_12b import CONFIG as _gemma3_12b
+from repro.configs.tinyllama_1_1b import CONFIG as _tinyllama
+from repro.configs.qwen2_72b import CONFIG as _qwen2
+from repro.configs.recurrentgemma_9b import CONFIG as _rgemma
+from repro.configs.mixtral_8x7b import CONFIG as _mixtral
+from repro.configs.deepseek_v3_671b import CONFIG as _dsv3
+from repro.configs.whisper_small import CONFIG as _whisper
+from repro.configs.internvl2_2b import CONFIG as _internvl
+from repro.configs.mamba2_2_7b import CONFIG as _mamba2
+
+REGISTRY: dict[str, ModelConfig] = {
+    c.name: c for c in [
+        _gemma2_9b, _gemma3_12b, _tinyllama, _qwen2, _rgemma,
+        _mixtral, _dsv3, _whisper, _internvl, _mamba2,
+    ]
+}
+
+ARCH_NAMES = tuple(REGISTRY)
+
+
+def get_config(name: str) -> ModelConfig:
+    if name not in REGISTRY:
+        raise KeyError(f'unknown arch {name!r}; known: {sorted(REGISTRY)}')
+    return REGISTRY[name]
+
+
+def get_smoke_config(name: str, **kw) -> ModelConfig:
+    return reduced(get_config(name), **kw)

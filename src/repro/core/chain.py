@@ -1,0 +1,47 @@
+"""CompressionChain: apply passes in a given order (the paper's pipeline).
+
+``run_chain(family, cfg, 'DPQE', hps, trainer)`` trains the baseline, applies
+each pass with fine-tuning, and records (accuracy, BitOpsCR, CR) after every
+stage — the data behind the paper's Fig. 15 / Tables 1–4.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.core.passes import PASSES, ChainState, Trainer, init_chain_state
+
+OPTIMAL_SEQUENCE = 'DPQE'   # the paper's combinational sequence law
+
+
+def run_chain(family, cfg, sequence: str, hps: dict, trainer: Trainer, *,
+              key=None, state: ChainState | None = None,
+              pretrain_steps=None):
+    """Apply ``sequence`` (e.g. 'DPQE'). hps: {pass_key: hyperparam dict}.
+
+    Returns the final ChainState; ``state.history`` holds per-stage metrics.
+    Pass an existing baseline ``state`` to reuse one trained original model
+    across different sequences (how the paper compares orders fairly).
+    """
+    if state is None:
+        state = init_chain_state(family, cfg, key or jax.random.key(0),
+                                 trainer, pretrain_steps=pretrain_steps)
+    for p in sequence:
+        if p not in PASSES:
+            raise KeyError(f'unknown pass {p!r} (have {sorted(PASSES)})')
+        state = PASSES[p].apply(state, hps.get(p, {}), trainer)
+        state.metrics(trainer, p)
+    return state
+
+
+def sweep_exit_thresholds(state: ChainState, trainer: Trainer, thresholds):
+    """Each trained early-exit model yields a frontier over thresholds
+    (the paper: 'each case with Early Exit provides several samples')."""
+    fam = state.family
+    batches = fam.eval_batches(trainer.eval_n, trainer.eval_batch)
+    out = []
+    for t in thresholds:
+        acc, probs = fam.exit_stats(state.params, state.cfg, batches, t)
+        bops = fam.bitops(state.cfg, probs, state.prune_scale)
+        out.append({'threshold': t, 'acc': acc,
+                    'BitOpsCR': state.base_bitops / max(bops, 1)})
+    return out

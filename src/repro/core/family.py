@@ -1,0 +1,408 @@
+"""Family adapters: uniform Compressible interface over CNNs and LMs.
+
+The compression passes (D/P/Q/E) are family-agnostic; everything
+model-specific — loss, physical structured pruning (gather to smaller dense
+shapes, the TPU-friendly realization of the paper's channel pruning),
+student shrinking, exit heads, BitOps — lives here.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import bitops as bo
+from repro.models import cnn as cnn_lib
+from repro.models import transformer as tfm
+from repro.models.layers import init_norm, init_dense, dense, rms_norm, unembed, softcap
+
+# ============================================================== CNN family
+
+
+@dataclass
+class CNNFamily:
+    data: Any                           # SyntheticImages
+    image: int = 32
+
+    # ----- basics
+    def init(self, key, cfg):
+        return cnn_lib.init_cnn(key, cfg)
+
+    def train_batch(self, key, n):
+        return self.data.batch(key, n)
+
+    def logits(self, params, cfg, x, collect_exits=False):
+        return cnn_lib.cnn_forward(params, cfg, x, collect_exits=collect_exits)
+
+    def logits_of(self, params, cfg, batch):
+        return self.logits(params, cfg, batch[0])
+
+    def default_exit_points(self, cfg):
+        n = len(cfg.stage_blocks)
+        return tuple(range(max(0, n - 3), n - 1))    # last stages before head
+
+    def exit_loss(self, params, cfg, batch):
+        x, y = batch
+        _, exits = self.logits(params, cfg, x, collect_exits=True)
+        ce = 0.0
+        for s, lg in exits.items():
+            ce += -jnp.mean(jnp.take_along_axis(
+                jax.nn.log_softmax(lg), y[:, None], axis=1))
+        return ce / max(len(exits), 1), exits
+
+    def loss(self, params, cfg, batch):
+        x, y = batch
+        lg = self.logits(params, cfg, x)
+        ce = -jnp.mean(jnp.take_along_axis(
+            jax.nn.log_softmax(lg), y[:, None], axis=1))
+        return ce, lg
+
+    def eval_batches(self, n, batch, seed=10_000):
+        key = jax.random.key(seed)
+        return [self.data.batch(jax.random.fold_in(key, i), batch)
+                for i in range(n)]
+
+    def accuracy(self, params, cfg, batches):
+        hit = tot = 0
+        f = jax.jit(lambda p, x: self.logits(p, cfg, x))
+        for x, y in batches:
+            hit += int(jnp.sum(jnp.argmax(f(params, x), -1) == y))
+            tot += int(y.size)
+        return hit / tot
+
+    # ----- distillation
+    def shrink(self, cfg, factor):
+        """Student config: depth-shrink resnet/vgg, width-shrink mobilenet."""
+        if cfg.kind == 'mobilenet':
+            widths = tuple(max(8, int(w * factor) // 8 * 8)
+                           for w in cfg.stage_widths)
+            return cfg.replace(name=cfg.name + '-student',
+                               stage_widths=widths)
+        blocks = tuple(max(1, round(b * factor)) for b in cfg.stage_blocks)
+        if blocks == cfg.stage_blocks:               # depth already minimal
+            widths = tuple(max(8, int(w * factor) // 4 * 4)
+                           for w in cfg.stage_widths)
+            return cfg.replace(name=cfg.name + '-student',
+                               stage_widths=widths)
+        return cfg.replace(name=cfg.name + '-student', stage_blocks=blocks)
+
+    # ----- pruning (physical channel shrink)
+    def prune(self, params, cfg, ratio):
+        """Prune inner conv channels by L2 importance; returns (params, cfg)."""
+        params = jax.tree.map(lambda x: x, params)   # shallow copy
+
+        def topk_idx(w, keep):                        # w: (..., C) importance
+            imp = np.asarray(jnp.sqrt(jnp.sum(jnp.square(w),
+                                              axis=tuple(range(w.ndim - 1)))))
+            return np.sort(np.argsort(imp)[::-1][:keep])
+
+        for s, blocks in enumerate(params['stages']):
+            for blk in blocks:
+                if cfg.kind == 'resnet':
+                    C = blk['conv1']['w'].shape[-1]
+                    keep = max(4, int(C * (1 - ratio)))
+                    idx = topk_idx(blk['conv1']['w'], keep)
+                    blk['conv1'] = {'w': blk['conv1']['w'][..., idx],
+                                    'b': blk['conv1']['b'][idx]}
+                    blk['n1'] = {'scale': blk['n1']['scale'][idx],
+                                 'bias': blk['n1']['bias'][idx]}
+                    blk['conv2'] = {'w': blk['conv2']['w'][:, :, idx, :],
+                                    'b': blk['conv2']['b']}
+                elif cfg.kind == 'mobilenet':
+                    E = blk['expand']['w'].shape[-1]
+                    keep = max(4, int(E * (1 - ratio)))
+                    idx = topk_idx(blk['expand']['w'], keep)
+                    blk['expand'] = {'w': blk['expand']['w'][..., idx],
+                                     'b': blk['expand']['b'][idx]}
+                    blk['n1'] = {'scale': blk['n1']['scale'][idx],
+                                 'bias': blk['n1']['bias'][idx]}
+                    blk['dw'] = {'w': blk['dw']['w'][..., idx],
+                                 'b': blk['dw']['b'][idx]}
+                    blk['n2'] = {'scale': blk['n2']['scale'][idx],
+                                 'bias': blk['n2']['bias'][idx]}
+                    blk['project'] = {'w': blk['project']['w'][:, :, idx, :],
+                                      'b': blk['project']['b']}
+                # vgg handled below (chained)
+        if cfg.kind == 'vgg':
+            prev_idx = None
+            for s, blocks in enumerate(params['stages']):
+                for blk in blocks:
+                    w = blk['conv1']['w']
+                    if prev_idx is not None:
+                        w = w[:, :, prev_idx, :]
+                    C = w.shape[-1]
+                    keep = max(4, int(C * (1 - ratio)))
+                    idx = topk_idx(w, keep)
+                    blk['conv1'] = {'w': w[..., idx], 'b': blk['conv1']['b'][idx]}
+                    blk['n1'] = {'scale': blk['n1']['scale'][idx],
+                                 'bias': blk['n1']['bias'][idx]}
+                    prev_idx = idx
+            params['head'] = {'w': params['head']['w'][prev_idx, :],
+                              'b': params['head']['b']}
+            widths = tuple(max(4, int(w * (1 - ratio)))
+                           for w in cfg.stage_widths)
+            cfg = cfg.replace(stage_widths=widths)
+        # effective MAC shrink for resnet/mobilenet inner channels: reflect in
+        # a pruned-fraction field used by the cost model
+        new_cfg = cfg.replace(name=cfg.name) if cfg.kind == 'vgg' else cfg
+        return params, new_cfg
+
+    def pruned_bitops_scale(self, ratio, cfg):
+        """Fraction of stage MACs remaining after inner-channel pruning."""
+        if cfg.kind == 'vgg':
+            return 1.0                                # already in cfg widths
+        return 1.0 - ratio                            # inner convs dominate
+
+    # ----- early exit
+    def add_exits(self, key, params, cfg, stages):
+        cfg = cfg.replace(exit_stages=tuple(stages))
+        params = dict(params)
+        params['exits'] = {}
+        for s in stages:
+            # read the true (possibly pruned) feature dim off the last block
+            blk = params['stages'][s][-1]
+            if cfg.kind == 'mobilenet':
+                dim = blk['project']['w'].shape[-1]
+            elif cfg.kind == 'resnet':
+                dim = blk['conv2']['w'].shape[-1]
+            else:
+                dim = blk['conv1']['w'].shape[-1]
+            params['exits'][str(s)] = cnn_lib._fc_init(
+                jax.random.fold_in(key, s), dim, cfg.num_classes)
+        return params, cfg
+
+    def exit_stats(self, params, cfg, batches, threshold):
+        """(accuracy, exit_probs) of the dynamic early-exit model."""
+        f = jax.jit(lambda p, x: self.logits(p, cfg, x, collect_exits=True))
+        probs = {s: [0, 0] for s in cfg.exit_stages}
+        hit = tot = 0
+        for x, y in batches:
+            final, exits = f(params, x)
+            alive = np.ones(y.shape[0], bool)
+            pred = np.array(jnp.argmax(final, -1))
+            for s in cfg.exit_stages:
+                p = np.asarray(jax.nn.softmax(exits[s]))
+                conf = p.max(-1) > threshold
+                take = alive & conf
+                probs[s][0] += int(take.sum())
+                probs[s][1] += int(alive.sum())
+                pred[take] = p.argmax(-1)[take]
+                alive &= ~conf
+            hit += int((pred == np.asarray(y)).sum())
+            tot += int(y.size)
+        exit_probs = {s: (c / max(n, 1)) for s, (c, n) in probs.items()}
+        return hit / tot, exit_probs
+
+    # ----- costs
+    def bitops(self, cfg, exit_probs=None, prune_scale=1.0):
+        stem, stages, head, exits = bo.cnn_stage_macs(cfg, self.image)
+        w_b = cfg.w_bits or bo.FP_BITS
+        a_b = cfg.a_bits or bo.FP_BITS
+        if not exit_probs:
+            return (stem + sum(stages) * prune_scale + head) * w_b * a_b
+        total, p_rem, run = 0.0, 1.0, float(stem)
+        for s in range(len(stages)):
+            run += stages[s] * prune_scale
+            if s in exit_probs:
+                run += exits[s]
+                total += p_rem * exit_probs[s] * run
+                p_rem *= 1 - exit_probs[s]
+        total += p_rem * (run + head)
+        return total * w_b * a_b
+
+    def storage_bits(self, params, cfg):
+        return bo.param_storage_bits(params, cfg.w_bits)
+
+
+# =============================================================== LM family
+
+
+@dataclass
+class LMFamily:
+    data: Any                           # SyntheticTokens
+    seq: int = 128
+    model_cache: dict = field(default_factory=dict)
+
+    def _fwd(self, params, cfg, batch, collect=False):
+        return tfm.forward(params, cfg, batch['tokens'],
+                           collect_hiddens=collect)
+
+    def init(self, key, cfg):
+        return tfm.init_lm(key, cfg)
+
+    def train_batch(self, key, n):
+        return self.data.batch(key, n, self.seq)
+
+    def logits_of(self, params, cfg, batch):
+        return self._fwd(params, cfg, batch)
+
+    def default_exit_points(self, cfg):
+        _, G, _, _ = tfm.layer_groups(cfg)
+        return tuple(sorted({G // 3, 2 * G // 3}))
+
+    def exit_loss(self, params, cfg, batch):
+        _, exits = self.exit_logits(params, cfg, batch)
+        ce = 0.0
+        for g, lg in exits.items():
+            ce += -jnp.mean(jnp.take_along_axis(
+                jax.nn.log_softmax(lg.astype(jnp.float32)),
+                batch['labels'][..., None], axis=-1))
+        return ce / max(len(exits), 1), exits
+
+    def loss(self, params, cfg, batch):
+        lg = self._fwd(params, cfg, batch)
+        ce = -jnp.mean(jnp.take_along_axis(
+            jax.nn.log_softmax(lg.astype(jnp.float32)),
+            batch['labels'][..., None], axis=-1))
+        return ce, lg
+
+    def eval_batches(self, n, batch, seed=10_000):
+        key = jax.random.key(seed)
+        return [self.data.batch(jax.random.fold_in(key, i), batch, self.seq)
+                for i in range(n)]
+
+    def accuracy(self, params, cfg, batches):
+        """Next-token top-1 accuracy (the LM analogue of classification acc)."""
+        hit = tot = 0
+        f = jax.jit(lambda p, b: jnp.argmax(self._fwd(p, cfg, b), -1))
+        for b in batches:
+            hit += int(jnp.sum(f(params, b) == b['labels']))
+            tot += int(b['labels'].size)
+        return hit / tot
+
+    def shrink(self, cfg, factor):
+        pat = len(cfg.block_pattern)
+        n = max(pat, int(round(cfg.num_layers * factor / pat)) * pat)
+        return cfg.replace(name=cfg.name + '-student', num_layers=n)
+
+    # ----- pruning: d_ff channels (+ experts for MoE), uniform across layers
+    def prune(self, params, cfg, ratio):
+        if cfg.is_moe and cfg.n_experts > 2:
+            return self._prune_experts(params, cfg, ratio)
+        if not cfg.d_ff:
+            return params, cfg                       # ssm: P inapplicable
+        keep = max(8, int(cfg.d_ff * (1 - ratio)))
+
+        def prune_mlp(mp, stacked):
+            wi, wo = mp['wi']['w'], mp['wo']['w']
+            wg = mp['wg']['w'] if 'wg' in mp else jnp.zeros_like(wi)
+            imp = jnp.sqrt(jnp.sum(jnp.square(wi), axis=-2)
+                           + jnp.sum(jnp.square(wg), axis=-2)) \
+                * jnp.sqrt(jnp.sum(jnp.square(wo), axis=-1))
+            if stacked:
+                idx = jnp.argsort(-imp, axis=-1)[..., :keep]   # (G, keep)
+                take_col = lambda w: jnp.take_along_axis(       # noqa: E731
+                    w, idx[:, None, :], axis=-1)
+                take_row = lambda w: jnp.take_along_axis(       # noqa: E731
+                    w, idx[..., None], axis=-2)
+            else:
+                idx = jnp.sort(jnp.argsort(-imp)[:keep])
+                take_col = lambda w: w[..., idx]                # noqa: E731
+                take_row = lambda w: w[..., idx, :]             # noqa: E731
+            out = {'wi': {'w': take_col(wi)}, 'wo': {'w': take_row(wo)}}
+            if 'wg' in mp:
+                out['wg'] = {'w': take_col(mp['wg']['w'])}
+            return out
+
+        new = dict(params)
+        new['prefix'] = [dict(lp, mlp=prune_mlp(lp['mlp'], False))
+                         if 'mlp' in lp else lp for lp in params['prefix']]
+        new['blocks'] = [dict(lp, mlp=prune_mlp(lp['mlp'], True))
+                         if 'mlp' in lp else lp for lp in params['blocks']]
+        new['tail'] = [dict(lp, mlp=prune_mlp(lp['mlp'], False))
+                       if 'mlp' in lp else lp for lp in params['tail']]
+        if 'encoder' in params:
+            new['encoder'] = dict(
+                params['encoder'],
+                layers=[dict(lp, mlp=prune_mlp(lp['mlp'], False))
+                        for lp in params['encoder']['layers']])
+        return new, cfg.replace(d_ff=keep)
+
+    def _prune_experts(self, params, cfg, ratio):
+        keep = max(cfg.top_k, int(cfg.n_experts * (1 - ratio)))
+
+        def prune_moe(mp, stacked):
+            rw = mp['router']['w']                    # (..., d, E)
+            imp = jnp.sqrt(jnp.sum(jnp.square(rw), axis=-2))
+            if stacked:
+                idx = jnp.argsort(-imp, axis=-1)[..., :keep]    # (G, keep)
+                r = jnp.take_along_axis(rw, idx[:, None, :], axis=-1)
+                tk = lambda w: jnp.take_along_axis(             # noqa: E731
+                    w, idx[:, :, None, None], axis=1)
+            else:
+                idx = jnp.sort(jnp.argsort(-imp)[:keep])
+                r = rw[..., idx]
+                tk = lambda w: w[idx]                           # noqa: E731
+            out = dict(mp, router={'w': r}, wi=tk(mp['wi']), wg=tk(mp['wg']),
+                       wo=tk(mp['wo']))
+            return out
+
+        new = dict(params)
+        for grp in ('prefix', 'blocks', 'tail'):
+            new[grp] = [dict(lp, moe=prune_moe(lp['moe'], grp == 'blocks'))
+                        if 'moe' in lp else lp for lp in params[grp]]
+        return new, cfg.replace(n_experts=keep)
+
+    # ----- early exit: heads after scan groups
+    def add_exits(self, key, params, cfg, groups):
+        params = dict(params)
+        params['exit_heads'] = {
+            str(g): {'norm': init_norm(cfg.d_model, jnp.dtype(cfg.dtype)),
+                     'adapter': init_dense(jax.random.fold_in(key, g),
+                                           cfg.d_model, cfg.d_model,
+                                           dtype=jnp.dtype(cfg.dtype))}
+            for g in groups}
+        return params, cfg.replace(exit_layers=tuple(groups))
+
+    def exit_logits(self, params, cfg, batch):
+        lg, hiddens = self._fwd(params, cfg, batch, collect=True)
+        quant = (cfg.w_bits, cfg.a_bits)
+        out = {}
+        for g_str, hp in params.get('exit_heads', {}).items():
+            g = int(g_str)
+            h = hiddens[g]
+            h = rms_norm(hp['norm'], h + dense(hp['adapter'], h, quant=quant),
+                         cfg.norm_eps)
+            elg = unembed(params.get('unembed', params['embed']), h,
+                          quant=quant)
+            out[g] = softcap(elg, cfg.logit_softcap)
+        return lg, out
+
+    def exit_stats(self, params, cfg, batches, threshold):
+        f = jax.jit(lambda p, b: self.exit_logits(p, cfg, b))
+        probs = {g: [0, 0] for g in cfg.exit_layers}
+        hit = tot = 0
+        for b in batches:
+            final, exits = f(params, b)
+            y = np.asarray(b['labels']).reshape(-1)
+            alive = np.ones(y.shape, bool)
+            pred = np.array(jnp.argmax(final, -1)).reshape(-1)
+            for g in sorted(cfg.exit_layers):
+                p = np.asarray(jax.nn.softmax(
+                    exits[g].astype(jnp.float32))).reshape(-1, cfg.vocab_size)
+                conf = p.max(-1) > threshold
+                take = alive & conf
+                probs[g][0] += int(take.sum())
+                probs[g][1] += int(alive.sum())
+                pred[take] = p.argmax(-1)[take]
+                alive &= ~conf
+            hit += int((pred == y).sum())
+            tot += int(y.size)
+        return hit / tot, {g: c / max(n, 1) for g, (c, n) in probs.items()}
+
+    # ----- costs
+    def bitops(self, cfg, exit_probs=None, prune_scale=1.0):
+        # exit indices are scan-group indices -> convert to layer indices
+        ep = None
+        if exit_probs:
+            P = len(cfg.block_pattern)
+            ep = {cfg.first_dense_layers + (g + 1) * P - 1: p
+                  for g, p in exit_probs.items()}
+        return bo.lm_bitops(cfg, self.seq, exit_probs=ep)
+
+    def storage_bits(self, params, cfg):
+        return bo.param_storage_bits(params, cfg.w_bits)

@@ -1,0 +1,124 @@
+"""Fixed-point uniform quantization-aware training (paper's Q pass).
+
+Follows DoReFa-style fixed-point uniform QAT (Zhou et al., 2016): symmetric
+per-channel weight quantization + unsigned activation quantization after a
+learned-free clip, with straight-through estimators.  This module is pure
+jnp — it is both the math used inside the models (fake-quant hook on every
+matmul) and the oracle for the Pallas ``fake_quant`` / ``quant_matmul``
+kernels.
+
+The actual *pass* object (QuantizationPass) lives in core/passes.py; it sets
+``cfg.w_bits / cfg.a_bits`` and runs QAT fine-tuning.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _ste(x_q: jax.Array, x: jax.Array) -> jax.Array:
+    """Straight-through estimator: forward x_q, gradient of identity."""
+    return x + jax.lax.stop_gradient(x_q - x)
+
+
+def quantize_weight(w: jax.Array, bits: int, *, axis: int | None = -1):
+    """Symmetric per-channel int quantization. Returns (int_values, scale).
+
+    ``axis`` is the output-channel axis that gets its own scale
+    (None = per-tensor).  bits=1 follows DoReFa binary weights
+    (sign * mean|w|).
+    """
+    if bits == 1:
+        scale = jnp.mean(jnp.abs(w), axis=None if axis is None else tuple(
+            i for i in range(w.ndim) if i != (axis % w.ndim)), keepdims=True)
+        q = jnp.sign(w)
+        q = jnp.where(q == 0, 1.0, q)
+        return q.astype(jnp.int8), scale
+    qmax = 2.0 ** (bits - 1) - 1.0
+    if axis is None:
+        amax = jnp.max(jnp.abs(w))
+    else:
+        red = tuple(i for i in range(w.ndim) if i != (axis % w.ndim))
+        amax = jnp.max(jnp.abs(w), axis=red, keepdims=True)
+    scale = jnp.maximum(amax, 1e-8) / qmax
+    q = jnp.clip(jnp.round(w / scale), -qmax - 1, qmax)
+    return q.astype(jnp.int8 if bits <= 8 else jnp.int32), scale
+
+
+def fake_quant_weight(w: jax.Array, bits: int, *, axis: int | None = -1) -> jax.Array:
+    """Quantize->dequantize with STE (QAT forward for weights)."""
+    if bits <= 0 or bits >= 32:
+        return w
+    q, scale = quantize_weight(w, bits, axis=axis)
+    return _ste(q.astype(w.dtype) * scale.astype(w.dtype), w)
+
+
+def fake_quant_act(x: jax.Array, bits: int, *, amax: float | None = None) -> jax.Array:
+    """Activation fake-quant: symmetric uniform with running-free abs-max clip.
+
+    Per-tensor dynamic scale (abs-max of the current batch) — matches the
+    hardware-friendly 'fixed-point uniform' choice in the paper; stop-gradient
+    on the scale keeps QAT stable.
+    """
+    if bits <= 0 or bits >= 32:
+        return x
+    qmax = 2.0 ** (bits - 1) - 1.0
+    s = jnp.max(jnp.abs(x)) if amax is None else jnp.asarray(amax, x.dtype)
+    s = jax.lax.stop_gradient(jnp.maximum(s, 1e-8)) / qmax
+    xq = jnp.clip(jnp.round(x / s), -qmax - 1, qmax) * s
+    return _ste(xq.astype(x.dtype), x)
+
+
+def quantize_params_for_serving(params, bits: int = 8):
+    """Convert every matmul weight to int8 + per-out-channel scales.
+
+    The serving-side realization of the paper's Q pass: weights are stored
+    (and read from HBM) as int8, halving the weight-streaming bytes that
+    dominate memory-bound decode.  ``layers.dense`` recognizes the
+    {'w_q','scale'} form and dequantizes in-register (on TPU the
+    kernels/quant_matmul Pallas kernel consumes the int8 form directly).
+    Embedding tables (lookups) and norm scales are left untouched.
+    """
+    qmax = 2.0 ** (bits - 1) - 1.0
+
+    def quant(v):
+        # per-(layer, out-channel) scales: reduce the contraction dim only
+        amax = jnp.max(jnp.abs(v.astype(jnp.float32)), axis=-2,
+                       keepdims=True)
+        scale = jnp.maximum(amax, 1e-8) / qmax
+        q = jnp.clip(jnp.round(v.astype(jnp.float32) / scale),
+                     -qmax - 1, qmax).astype(jnp.int8)
+        return q, scale.astype(jnp.float32)
+
+    def convert(node, name=''):
+        if isinstance(node, dict):
+            out = {}
+            for k, v in node.items():
+                # matmul weights: 2D (d,f) or scan-stacked 3D (G,d,f)
+                if name != 'conv' and k == 'w' and hasattr(v, 'ndim') \
+                        and v.ndim in (2, 3):
+                    q, s = quant(v)
+                    out['w_q'], out['scale'] = q, s
+                # MoE expert weights: (E,d,f) or stacked (G,E,d,f)
+                elif k in ('wi', 'wg', 'wo') and hasattr(v, 'ndim') \
+                        and getattr(v, 'ndim', 0) in (3, 4) \
+                        and not isinstance(v, dict):
+                    q, s = quant(v)
+                    out[k] = {'w_q': q, 'scale': s}
+                else:
+                    out[k] = convert(v, k)
+            return out
+        if isinstance(node, list):
+            return [convert(v, name) for v in node]
+        if isinstance(node, tuple):
+            return tuple(convert(v, name) for v in node)
+        return node
+
+    return convert(params)
+
+
+def quantized_params_bits(params, bits: int) -> int:
+    """Total storage bits for a params pytree at `bits` per weight."""
+    leaves = jax.tree_util.tree_leaves(params)
+    n = sum(x.size for x in leaves)
+    return n * bits

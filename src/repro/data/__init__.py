@@ -1,0 +1,2 @@
+from repro.data.synthetic import (SyntheticImages, SyntheticTokens,
+                                  lm_batches, image_batches)  # noqa: F401

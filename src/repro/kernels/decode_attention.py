@@ -1,0 +1,163 @@
+"""Flash-decode Pallas kernel: one-token GQA attention over a long cache.
+
+Per (batch, kv-head) grid cell, the query group (g = H/K heads) attends to
+the cache in (s_blk, D) VMEM tiles with an online-softmax accumulator in
+scratch — O(s_blk·D) VMEM for arbitrarily long caches, the decode-side
+analogue of flash attention, tiled so D and s_blk are multiples of 128 for
+the MXU.  This is the per-device *local* computation of the sequence-sharded
+decode path (the softmax-merge across shards happens in the launcher's
+shard_map wrapper).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _fit(block: int, dim: int) -> int:
+    """Largest divisor of ``dim`` that is <= ``block`` (prefers mult. of 128)."""
+    b = min(block, dim)
+    while dim % b:
+        b -= 1
+    return b
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(q_ref, k_ref, v_ref, valid_ref, o_ref,
+                   m_ref, l_ref, acc_ref, *, n_s):
+    s = pl.program_id(2)
+
+    @pl.when(s == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0]                                 # (g, D)
+    k = k_ref[0, 0]                                 # (s_blk, D)
+    v = v_ref[0, 0]                                 # (s_blk, D)
+    scale = q.shape[-1] ** -0.5
+    logits = jax.lax.dot_general(
+        q.astype(jnp.float32) * scale, k.astype(jnp.float32),
+        (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)         # (g, s_blk)
+    logits = jnp.where(valid_ref[...][None, :], logits, NEG_INF)
+
+    m_new = jnp.maximum(m_ref[...], jnp.max(logits, axis=-1))
+    p = jnp.exp(logits - m_new[:, None])
+    corr = jnp.exp(m_ref[...] - m_new)
+    l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=-1)
+    acc_ref[...] = acc_ref[...] * corr[:, None] + jax.lax.dot_general(
+        p, v.astype(jnp.float32), (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(s == n_s - 1)
+    def _done():
+        o_ref[0, 0] = (acc_ref[...]
+                    / jnp.maximum(l_ref[...], 1e-30)[:, None]).astype(o_ref.dtype)
+
+
+def _decode_kernel_int8(q_ref, k_ref, v_ref, ks_ref, vs_ref, valid_ref,
+                        o_ref, m_ref, l_ref, acc_ref, *, n_s):
+    """int8-KV variant: k/v stream from HBM as int8 and dequantize in VMEM
+    (per-token scales) — halves the cache-read bytes that dominate
+    memory-bound decode (§Perf iteration 7)."""
+    s = pl.program_id(2)
+
+    @pl.when(s == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0]
+    k = k_ref[0, 0].astype(jnp.float32) * ks_ref[0, 0][:, None]
+    v = v_ref[0, 0].astype(jnp.float32) * vs_ref[0, 0][:, None]
+    scale = q.shape[-1] ** -0.5
+    logits = jax.lax.dot_general(
+        q.astype(jnp.float32) * scale, k, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    logits = jnp.where(valid_ref[...][None, :], logits, NEG_INF)
+    m_new = jnp.maximum(m_ref[...], jnp.max(logits, axis=-1))
+    p = jnp.exp(logits - m_new[:, None])
+    corr = jnp.exp(m_ref[...] - m_new)
+    l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=-1)
+    acc_ref[...] = acc_ref[...] * corr[:, None] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(s == n_s - 1)
+    def _done():
+        o_ref[0, 0] = (acc_ref[...] / jnp.maximum(
+            l_ref[...], 1e-30)[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=('s_blk', 'interpret'))
+def decode_attention_int8(q, k_q, v_q, k_s, v_s, valid, *, s_blk=512,
+                          interpret=False):
+    """q: (B,H,D); k_q,v_q: int8 (B,S,K,D); k_s,v_s: (B,S,K) fp32 scales."""
+    B, H, D = q.shape
+    S, K = k_q.shape[1], k_q.shape[2]
+    g = H // K
+    s_blk = _fit(s_blk, S)
+    n_s = S // s_blk
+    qg = q.reshape(B, K, g, D)
+    kt = k_q.transpose(0, 2, 1, 3)
+    vt = v_q.transpose(0, 2, 1, 3)
+    kst = k_s.transpose(0, 2, 1)
+    vst = v_s.transpose(0, 2, 1)
+    out = pl.pallas_call(
+        functools.partial(_decode_kernel_int8, n_s=n_s),
+        grid=(B, K, n_s),
+        in_specs=[
+            pl.BlockSpec((1, 1, g, D), lambda b, h, s: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, s_blk, D), lambda b, h, s: (b, h, s, 0)),
+            pl.BlockSpec((1, 1, s_blk, D), lambda b, h, s: (b, h, s, 0)),
+            pl.BlockSpec((1, 1, s_blk), lambda b, h, s: (b, h, s)),
+            pl.BlockSpec((1, 1, s_blk), lambda b, h, s: (b, h, s)),
+            pl.BlockSpec((s_blk,), lambda b, h, s: (s,)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, D), lambda b, h, s: (b, h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, K, g, D), q.dtype),
+        scratch_shapes=[pltpu.VMEM((g,), jnp.float32),
+                        pltpu.VMEM((g,), jnp.float32),
+                        pltpu.VMEM((g, D), jnp.float32)],
+        interpret=interpret,
+    )(qg, kt, vt, kst, vst, valid)
+    return out.reshape(B, H, D)
+
+
+@functools.partial(jax.jit, static_argnames=('s_blk', 'interpret'))
+def decode_attention(q, k, v, valid, *, s_blk=512, interpret=False):
+    """q: (B,H,D); k,v: (B,S,K,D); valid: (S,) bool. Returns (B,H,D)."""
+    B, H, D = q.shape
+    S, K = k.shape[1], k.shape[2]
+    g = H // K
+    s_blk = _fit(s_blk, S)
+    n_s = S // s_blk
+    qg = q.reshape(B, K, g, D)
+    kt = k.transpose(0, 2, 1, 3)                    # (B,K,S,D)
+    vt = v.transpose(0, 2, 1, 3)
+    out = pl.pallas_call(
+        functools.partial(_decode_kernel, n_s=n_s),
+        grid=(B, K, n_s),
+        in_specs=[
+            pl.BlockSpec((1, 1, g, D), lambda b, h, s: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, s_blk, D), lambda b, h, s: (b, h, s, 0)),
+            pl.BlockSpec((1, 1, s_blk, D), lambda b, h, s: (b, h, s, 0)),
+            pl.BlockSpec((s_blk,), lambda b, h, s: (s,)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, D), lambda b, h, s: (b, h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, K, g, D), q.dtype),
+        scratch_shapes=[pltpu.VMEM((g,), jnp.float32),
+                        pltpu.VMEM((g,), jnp.float32),
+                        pltpu.VMEM((g, D), jnp.float32)],
+        interpret=interpret,
+    )(qg, kt, vt, valid)
+    return out.reshape(B, H, D)

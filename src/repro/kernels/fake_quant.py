@@ -1,0 +1,67 @@
+"""Fused per-channel fake-quantization Pallas kernels (the QAT hot op).
+
+QAT evaluates quantize→dequantize on every weight every step.  XLA's naive
+lowering materializes abs/max/round intermediates in HBM; here the abs-max
+reduction and the rounding pass are two VMEM-tiled kernels (reduction
+kernel accumulates per-column amax across K tiles; quantize kernel is a
+single elementwise sweep with the (bn,)-scales block resident in VMEM).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _fit(block: int, dim: int) -> int:
+    """Largest divisor of ``dim`` that is <= ``block`` (prefers mult. of 128)."""
+    b = min(block, dim)
+    while dim % b:
+        b -= 1
+    return b
+
+
+def _amax_kernel(w_ref, o_ref, *, n_k):
+    k = pl.program_id(1)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] = jnp.maximum(o_ref[...],
+                             jnp.max(jnp.abs(w_ref[...]), axis=0))
+
+
+def _quant_kernel(w_ref, amax_ref, o_ref, *, qmax):
+    scale = jnp.maximum(amax_ref[...], 1e-8) / qmax
+    w = w_ref[...] / scale[None, :]
+    o_ref[...] = (jnp.clip(jnp.round(w), -qmax - 1, qmax)
+                  * scale[None, :]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=('bits', 'bk', 'bn', 'interpret'))
+def fake_quant(w, *, bits=8, bk=512, bn=256, interpret=False):
+    """Per-output-channel (last-dim) symmetric fake quant of w (K, N)."""
+    K, N = w.shape
+    bk, bn = _fit(bk, K), _fit(bn, N)
+    qmax = 2.0 ** (bits - 1) - 1.0
+    amax = pl.pallas_call(
+        functools.partial(_amax_kernel, n_k=K // bk),
+        grid=(N // bn, K // bk),
+        in_specs=[pl.BlockSpec((bk, bn), lambda j, k: (k, j))],
+        out_specs=pl.BlockSpec((bn,), lambda j, k: (j,)),
+        out_shape=jax.ShapeDtypeStruct((N,), jnp.float32),
+        interpret=interpret,
+    )(w.astype(jnp.float32))
+    return pl.pallas_call(
+        functools.partial(_quant_kernel, qmax=qmax),
+        grid=(K // bk, N // bn),
+        in_specs=[pl.BlockSpec((bk, bn), lambda i, j: (i, j)),
+                  pl.BlockSpec((bn,), lambda i, j: (j,))],
+        out_specs=pl.BlockSpec((bk, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((K, N), w.dtype),
+        interpret=interpret,
+    )(w, amax)

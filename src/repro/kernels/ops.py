@@ -1,0 +1,55 @@
+"""Public jit'd wrappers over the Pallas kernels.
+
+On CPU (this container) kernels run in ``interpret=True`` mode, which
+executes the kernel body in Python for correctness validation; on TPU the
+same BlockSpecs compile to Mosaic.  ``use_pallas=False`` falls back to the
+pure-jnp oracle (used by models at training time on CPU, where interpret
+mode is too slow to train through).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.decode_attention import decode_attention as _pallas_decode
+from repro.kernels.fake_quant import fake_quant as _pallas_fake_quant
+from repro.kernels.quant_matmul import quant_matmul as _pallas_qmm
+
+
+def _interpret() -> bool:
+    return jax.default_backend() == 'cpu'
+
+
+def quant_matmul(x_q, w_q, sx, sw, *, use_pallas=True, **kw):
+    if not use_pallas:
+        return ref.quant_matmul_ref(x_q, w_q, sx, sw)
+    return _pallas_qmm(x_q, w_q, sx, sw, interpret=_interpret(), **kw)
+
+
+def fake_quant(w, bits=8, *, use_pallas=True, **kw):
+    if not use_pallas:
+        return ref.fake_quant_ref(w, bits)
+    return _pallas_fake_quant(w, bits=bits, interpret=_interpret(), **kw)
+
+
+def decode_attention(q, k, v, valid, *, use_pallas=True, **kw):
+    if not use_pallas:
+        return ref.decode_attention_ref(q, k, v,
+                                        jnp.broadcast_to(valid,
+                                                         (q.shape[0],
+                                                          k.shape[1])))
+    return _pallas_decode(q, k, v, valid, interpret=_interpret(), **kw)
+
+
+def quantize_dense_int8(x, w):
+    """Dynamic-quantize x and w to int8 and run the quantized matmul.
+
+    The int8 *serving* path for a dense layer: per-row activation scales,
+    per-column weight scales.  Returns fp32 (M, N).
+    """
+    sx = jnp.maximum(jnp.max(jnp.abs(x), axis=1), 1e-8) / 127.0
+    xq = jnp.clip(jnp.round(x / sx[:, None]), -128, 127).astype(jnp.int8)
+    sw = jnp.maximum(jnp.max(jnp.abs(w), axis=0), 1e-8) / 127.0
+    wq = jnp.clip(jnp.round(w / sw[None, :]), -128, 127).astype(jnp.int8)
+    return quant_matmul(xq, wq, sx, sw)

@@ -1,0 +1,73 @@
+"""W8A8 quantized matmul Pallas kernel — the TPU realization of the paper's
+Q pass at inference time.
+
+The GPU papers realize low-bit wins with bit-serial/CUDA-core tricks; on TPU
+the win comes from feeding the 128x128 MXU int8 operands (2x MACs/cycle vs
+bf16 on v5e) and halving HBM traffic.  Tiling: (bm x bk) @ (bk x bn) blocks
+resident in VMEM, fp32 dequant fused into the epilogue with per-row
+activation scales and per-column weight scales (also VMEM-resident).
+
+Grid is (M/bm, N/bn, K/bk) with the K axis innermost: the int32 accumulator
+lives in a VMEM scratch and is rescaled+flushed once per (m, n) tile.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _fit(block: int, dim: int) -> int:
+    """Largest divisor of ``dim`` that is <= ``block`` (prefers mult. of 128)."""
+    b = min(block, dim)
+    while dim % b:
+        b -= 1
+    return b
+
+
+def _qmm_kernel(x_ref, w_ref, sx_ref, sw_ref, o_ref, acc_ref, *, n_k):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jax.lax.dot_general(
+        x_ref[...], w_ref[...], (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32)
+
+    @pl.when(k == n_k - 1)
+    def _done():
+        scale = sx_ref[...][:, None] * sw_ref[...][None, :]
+        o_ref[...] = (acc_ref[...].astype(jnp.float32)
+                      * scale).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=('bm', 'bn', 'bk', 'out_dtype',
+                                             'interpret'))
+def quant_matmul(x_q, w_q, sx, sw, *, bm=128, bn=128, bk=256,
+                 out_dtype=jnp.float32, interpret=False):
+    """x_q: int8 (M,K); w_q: int8 (K,N); sx: (M,) fp32; sw: (N,) fp32."""
+    M, K = x_q.shape
+    K2, N = w_q.shape
+    assert K == K2
+    bm, bn, bk = _fit(bm, M), _fit(bn, N), _fit(bk, K)
+    n_k = K // bk
+    grid = (M // bm, N // bn, n_k)
+    return pl.pallas_call(
+        functools.partial(_qmm_kernel, n_k=n_k),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
+            pl.BlockSpec((bm,), lambda i, j, k: (i,)),
+            pl.BlockSpec((bn,), lambda i, j, k: (j,)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((M, N), out_dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.int32)],
+        interpret=interpret,
+    )(x_q, w_q, sx, sw)

@@ -1,0 +1,34 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def quant_matmul_ref(x_q, w_q, sx, sw, out_dtype=jnp.float32):
+    """int8 x (M,K) @ int8 w (K,N), per-row sx (M,), per-col sw (N,)."""
+    acc = jnp.einsum('mk,kn->mn', x_q.astype(jnp.int32), w_q.astype(jnp.int32),
+                     preferred_element_type=jnp.int32)
+    return (acc.astype(jnp.float32) * sx[:, None] * sw[None, :]).astype(out_dtype)
+
+
+def fake_quant_ref(w, bits: int):
+    """Per-output-channel (last dim) symmetric fake quantization."""
+    qmax = 2.0 ** (bits - 1) - 1.0
+    amax = jnp.max(jnp.abs(w), axis=0, keepdims=True)
+    scale = jnp.maximum(amax, 1e-8) / qmax
+    return jnp.clip(jnp.round(w / scale), -qmax - 1, qmax) * scale
+
+
+def decode_attention_ref(q, k, v, valid):
+    """q: (B,H,D); k,v: (B,S,K,D); valid: (B,S) bool. GQA decode oracle."""
+    B, H, D = q.shape
+    K = k.shape[2]
+    g = H // K
+    qg = q.reshape(B, K, g, D) * (D ** -0.5)
+    logits = jnp.einsum('bkgd,bskd->bkgs', qg.astype(jnp.float32),
+                        k.astype(jnp.float32))
+    logits = jnp.where(valid[:, None, None, :], logits, -1e30)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum('bkgs,bskd->bkgd', p, v.astype(jnp.float32))
+    return out.reshape(B, H, D).astype(q.dtype)

@@ -1,0 +1,243 @@
+"""Optimized-HLO analysis: FLOPs / HBM-traffic / collective bytes with
+while-loop (scan) trip-count scaling.
+
+XLA's HloCostAnalysis counts a while body ONCE; our models scan over layer
+groups, so everything inside the scan must be scaled by the trip count
+(parsed from the loop condition's comparison constant).  Scheduled HLO does
+not print operand shapes inline, so we build a per-computation symbol table
+(instruction name -> shape) from definition lines + computation headers and
+resolve operands through it.
+
+Per-device numbers (the HLO is the per-partition SPMD module):
+  * flops — dot (2·|out|·contract) and convolution ops, recursing into
+    fusions and while bodies (MXU-flops convention, as MFU is measured);
+  * bytes — per-op operand+output bytes at fusion granularity (fusion
+    internals live in registers/VMEM), an HBM-traffic upper-bound proxy;
+  * collectives — operand bytes per collective kind.
+"""
+from __future__ import annotations
+
+import re
+
+DTYPE_BYTES = {'f64': 8, 'f32': 4, 'bf16': 2, 'f16': 2, 'f8e4m3': 1,
+               'f8e5m2': 1, 's64': 8, 'u64': 8, 's32': 4, 'u32': 4,
+               's16': 2, 'u16': 2, 's8': 1, 'u8': 1, 'pred': 1,
+               'c64': 8, 'c128': 16, 'u4': 1, 's4': 1}
+
+COLL_KINDS = ('all-gather', 'all-reduce', 'reduce-scatter', 'all-to-all',
+              'collective-permute')
+
+_SHAPE = r'(?:' + '|'.join(DTYPE_BYTES) + r')\[[0-9,]*\]'
+SHAPE_RE = re.compile(r'\b(' + '|'.join(DTYPE_BYTES) + r')\[([0-9,]*)\]')
+DEF_RE = re.compile(r'^\s*(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*(\(?)')
+NAME_RE = re.compile(r'%([\w\.\-]+)')
+
+SKIP_BYTES_OPS = (' parameter(', ' constant(', ' tuple(',
+                  ' get-tuple-element(', ' bitcast(', ' after-all(',
+                  ' partition-id(', ' iota(')
+
+
+class Shape:
+    __slots__ = ('dims', 'bytes', 'elems')
+
+    def __init__(self, dims, dtype):
+        self.dims = dims
+        self.elems = 1
+        for d in dims:
+            self.elems *= d
+        self.bytes = self.elems * DTYPE_BYTES[dtype]
+
+
+def _parse_shapes(text):
+    out = []
+    for m in SHAPE_RE.finditer(text):
+        dims = tuple(int(d) for d in m.group(2).split(',') if d)
+        out.append(Shape(dims, m.group(1)))
+    return out
+
+
+def split_computations(hlo: str):
+    comps, cur, lines = {}, None, []
+    headers, entry = {}, None
+    for line in hlo.splitlines():
+        s = line.rstrip()
+        st = s.strip()
+        m = re.match(r'(ENTRY\s+)?%?([\w\.\-]+)\s*\((.*)\)\s*->.*\{$', st)
+        if m and not st.startswith('%param'):
+            if cur:
+                comps[cur] = lines
+            cur, lines = m.group(2), []
+            headers[cur] = m.group(3)
+            if m.group(1):
+                entry = cur
+        elif cur is not None:
+            lines.append(st)
+    if cur:
+        comps[cur] = lines
+    return comps, headers, entry
+
+
+def _symtab(comp_lines, header):
+    tab = {}
+    # params from the header: "param_0.2: f32[256,64], param_1: ..."
+    for pm in re.finditer(r'([\w\.\-]+):\s*(\(?[^,()]*(?:\([^)]*\))?)',
+                          header or ''):
+        shapes = _parse_shapes(pm.group(2))
+        if shapes:
+            tab[pm.group(1)] = shapes[0]
+    for line in comp_lines:
+        dm = DEF_RE.match(line)
+        if not dm:
+            continue
+        shapes = _parse_shapes(line.split(' = ', 1)[1].split('(')[0] + '(')
+        # output shape(s): everything before the opcode's '('
+        rhs = line.split(' = ', 1)[1]
+        head = rhs.split('(')[0]
+        shapes = _parse_shapes(head)
+        if shapes:
+            total = sum(s.bytes for s in shapes)
+            sh = shapes[0]
+            if len(shapes) > 1:            # tuple: record combined bytes
+                sh = Shape((0,), 'u8')
+                sh.bytes = total
+                sh.elems = 0
+                sh.dims = ()
+            tab[dm.group(1)] = sh
+    return tab
+
+
+def _operands(line):
+    """First-level operand names inside the opcode parens."""
+    m = re.search(r'\w[\w\-]*\(', line.split(' = ', 1)[-1])
+    if not m:
+        return []
+    rest = line[line.index(m.group(0), line.find(' = ')) + len(m.group(0)):]
+    depth, buf = 1, []
+    for ch in rest:
+        if ch == '(':
+            depth += 1
+        elif ch == ')':
+            depth -= 1
+            if depth == 0:
+                break
+        buf.append(ch)
+    args = ''.join(buf)
+    # strip nested attr refs after the closing paren are excluded already
+    return NAME_RE.findall(args)
+
+
+def analyze(hlo: str):
+    comps, headers, entry = split_computations(hlo)
+    tabs = {name: _symtab(lines, headers.get(name))
+            for name, lines in comps.items()}
+
+    def shape_of(comp, name):
+        sh = tabs.get(comp, {}).get(name)
+        if sh is None:
+            for t in tabs.values():
+                if name in t:
+                    return t[name]
+        return sh
+
+    def trip_count(cond_name):
+        consts = [int(x) for l in comps.get(cond_name, ())
+                  for x in re.findall(r'constant\((\d+)\)', l)]
+        return max(consts) if consts else 1
+
+    def dot_flops(comp, line):
+        outs = _parse_shapes(line.split(' = ', 1)[1].split(' dot(')[0])
+        if not outs:
+            return 0.0
+        out = outs[0].elems
+        ops = _operands(line)
+        lhs = shape_of(comp, ops[0]) if ops else None
+        cm = re.search(r'lhs_contracting_dims=\{([0-9,]*)\}', line)
+        contract = 1
+        if lhs is not None and cm:
+            for ci in cm.group(1).split(','):
+                if ci:
+                    contract *= lhs.dims[int(ci)]
+        return 2.0 * out * contract
+
+    def conv_flops(comp, line):
+        outs = _parse_shapes(line.split(' = ', 1)[1].split(' convolution(')[0])
+        if not outs:
+            return 0.0
+        out = outs[0].elems
+        ops = _operands(line)
+        kern = shape_of(comp, ops[1]) if len(ops) > 1 else None
+        if kern is None:
+            return 2.0 * out
+        cout = 1
+        dm = re.search(r'dim_labels=\w+_(\w+)->', line)
+        if dm:
+            for lab, dim in zip(dm.group(1), kern.dims):
+                if lab == 'o':
+                    cout = dim
+        return 2.0 * out * kern.elems / max(cout, 1)
+
+    def walk(name, seen):
+        if name in seen:
+            return 0.0, 0.0, {}
+        seen = seen | {name}
+        flops = bytes_ = 0.0
+        coll: dict[str, float] = {}
+        for line in comps.get(name, ()):
+            if ' dot(' in line:
+                flops += dot_flops(name, line)
+            elif ' convolution(' in line:
+                flops += conv_flops(name, line)
+            if ' while(' in line:
+                bm = re.search(r'body=%?([\w\.\-]+)', line)
+                cm = re.search(r'condition=%?([\w\.\-]+)', line)
+                if bm:
+                    tc = trip_count(cm.group(1)) if cm else 1
+                    f2, b2, c2 = walk(bm.group(1), seen)
+                    flops += f2 * tc
+                    bytes_ += b2 * tc
+                    for k, v in c2.items():
+                        coll[k] = coll.get(k, 0) + v * tc
+                continue
+            if ' fusion(' in line or ' call(' in line:
+                km = re.search(r'(?:calls|to_apply)=%?([\w\.\-]+)', line)
+                if km:
+                    f2, _, c2 = walk(km.group(1), seen)
+                    flops += f2
+                    for k, v in c2.items():
+                        coll[k] = coll.get(k, 0) + v
+            matched = None
+            for kind in COLL_KINDS:
+                if f' {kind}(' in line or f' {kind}-start(' in line:
+                    matched = kind
+                    break
+            if matched:
+                b = sum((shape_of(name, op) or Shape((), 'u8')).bytes
+                        for op in _operands(line))
+                coll[matched] = coll.get(matched, 0) + b
+            if ' dynamic-update-slice(' in line or \
+                    'dynamic-update-slice' in line.split('=')[0]:
+                # in-place update (scan carries, cache writes), possibly
+                # fused with a convert: only the update operand is real
+                # traffic, not the aliased full-buffer output.  For the
+                # fused form, exclude the largest operand (the target).
+                ops = _operands(line)
+                outs = _parse_shapes(line.split(' = ', 1)[1].split('(')[0])
+                out_b = sum(s.bytes for s in outs) or 1
+                shs = [shape_of(name, o) for o in ops]
+                # the update operand(s) are strictly smaller than the
+                # aliased target buffer(s); count only those
+                bytes_ += sum(s.bytes for s in shs
+                              if s is not None and s.bytes < out_b / 2)
+                continue
+            if '=' in line and not any(s in line for s in SKIP_BYTES_OPS):
+                # HBM proxy: each fusion-boundary buffer counted once where
+                # produced (x2 read+write applied by the roofline script);
+                # counting operands too would double-count every consumer.
+                outs = _parse_shapes(line.split(' = ', 1)[1].split('(')[0])
+                bytes_ += sum(s.bytes for s in outs)
+        return flops, bytes_, coll
+
+    if entry is None:
+        return {'flops': 0.0, 'bytes': 0.0, 'collectives': {}}
+    flops, bytes_, coll = walk(entry, frozenset())
+    return {'flops': flops, 'bytes': bytes_, 'collectives': coll}

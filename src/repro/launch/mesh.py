@@ -1,0 +1,30 @@
+"""Production meshes.
+
+Single pod: (16, 16) = 256 chips, axes (data, model).
+Multi-pod:  (2, 16, 16) = 512 chips, axes (pod, data, model) — 'pod' is an
+additional pure-DP axis over the cross-pod (DCN-class) links, so the only
+cross-pod collective is the gradient reduction.
+
+A FUNCTION, not a module constant: importing this module must never touch
+jax device state (smoke tests see 1 CPU device; only dryrun.py sets
+XLA_FLAGS for 512 host devices before any jax import).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ('pod', 'data', 'model') if multi_pod else ('data', 'model')
+    return jax.make_mesh(shape, axes)
+
+
+def data_axes(mesh) -> tuple:
+    """DP axes of a mesh (everything that is not 'model')."""
+    return tuple(a for a in mesh.axis_names if a != 'model')
+
+
+def make_local_mesh():
+    """1x1 mesh over the single local device (CPU tests)."""
+    return jax.make_mesh((1, 1), ('data', 'model'))

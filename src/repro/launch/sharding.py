@@ -1,0 +1,220 @@
+"""Sharding rules: parameter/optimizer/batch/cache PartitionSpecs.
+
+Megatron-style TP on the 'model' axis (vocab, heads, FFN hidden, experts,
+SSD heads, RG-LRU width), FSDP-style parameter sharding over the DP axes
+where divisible (params and optimizer states are both far too large to
+replicate for the 72B/671B archs — GSPMD inserts the per-layer all-gathers),
+and batch over ('pod','data').  Decode caches are **sequence-sharded** over
+'model' (plus 'data' for the batch=1 long-context cells).
+
+Everything is path-driven over the param pytree, so the same rules cover all
+10 architectures; per-arch overrides come from cfg (``shard_heads=False``
+for whisper's 12 heads).
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+MODEL = 'model'
+
+
+def _path_keys(path):
+    out = []
+    for p in path:
+        k = getattr(p, 'key', None)
+        if k is None:
+            k = getattr(p, 'idx', None)
+        out.append(str(k))
+    return out
+
+
+def _div(n, mesh, axis) -> bool:
+    return n % int(np.prod([mesh.shape[a] for a in (
+        axis if isinstance(axis, tuple) else (axis,))])) == 0
+
+
+def param_spec(path, leaf, cfg, mesh, *, fsdp_axes=()):
+    """PartitionSpec for one parameter leaf."""
+    keys = _path_keys(path)
+    shape = leaf.shape
+    stacked = 'blocks' in keys                # scan-stacked: leading G dim
+    off = 1 if stacked else 0
+
+    def out(*spec):
+        spec = (None,) * off + spec
+        # pad/truncate to rank
+        spec = (spec + (None,) * len(shape))[:len(shape)]
+        # drop shardings that do not divide
+        fixed = []
+        for dim, s in enumerate(spec):
+            if s is not None and not _div(shape[dim], mesh, s):
+                s = None
+            fixed.append(s)
+        # FSDP: shard the largest remaining replicated dim over DP axes
+        if fsdp_axes and len(shape) - off >= 2:
+            best, best_dim = 0, None
+            for dim in range(off, len(shape)):
+                if fixed[dim] is None and shape[dim] > best \
+                        and _div(shape[dim], mesh, tuple(fsdp_axes)):
+                    best, best_dim = shape[dim], dim
+            if best_dim is not None and best >= 1024:
+                fixed[best_dim] = tuple(fsdp_axes) if len(fsdp_axes) > 1 \
+                    else fsdp_axes[0]
+        return P(*fixed)
+
+    name = keys[-2] if keys and keys[-1] in ('w', 'b', 'w_q', 'scale') \
+        else keys[-1]
+    leafname = keys[-1]
+
+    # --- embeddings
+    if 'table' in keys:
+        return out(MODEL, None)
+    # --- attention
+    if name in ('wq', 'wk', 'wv') or (len(keys) >= 3 and keys[-3] in
+                                      ('wq', 'wk', 'wv')):
+        if not cfg.shard_heads:
+            return out(None, None)
+        return out(None, MODEL) if leafname in ('w', 'w_q') else out(MODEL)
+    if name == 'wo' and 'attn' in keys or name == 'wo' and 'xattn' in keys:
+        return out(MODEL, None) if leafname in ('w', 'w_q') else out(None)
+    # --- MLA
+    if name in ('wq_a', 'wkv_a'):
+        return out(None, None)
+    if name == 'wq_b':
+        return out(None, MODEL) if cfg.shard_heads else out(None, None)
+    if name in ('wk_b', 'wv_b'):
+        return out(None, MODEL, None)             # (r, H, dn/dv): heads
+    # --- MoE (expert parallelism over 'model')
+    if 'moe' in keys:
+        if name == 'router':
+            return out(None, None)
+        if name in ('wi', 'wg', 'wo') and len(shape) - off == 3:
+            return out(MODEL, None, None)
+    # --- dense MLP
+    if name in ('wi', 'wg'):
+        return out(None, MODEL) if leafname in ('w', 'w_q') else out(MODEL)
+    if name == 'wo':
+        return out(MODEL, None) if leafname in ('w', 'w_q') else out(None)
+    # --- RG-LRU
+    if 'rglru' in keys:
+        if name in ('wgate', 'wx', 'w_r', 'w_i'):
+            return out(None, MODEL) if leafname in ('w', 'w_q') else out(MODEL)
+        if name == 'conv':
+            return out(None, MODEL) if leafname == 'w' else out(MODEL)
+        if leafname == 'lam':
+            return out(MODEL)
+    # --- Mamba-2
+    if 'mamba' in keys:
+        if name in ('in_proj',):
+            return out(None, MODEL) if leafname in ('w', 'w_q') else out(MODEL)
+        if name == 'out_proj':
+            return out(MODEL, None) if leafname in ('w', 'w_q') else out(None)
+        if name == 'conv':
+            return out(None, MODEL) if leafname == 'w' else out(MODEL)
+        if leafname in ('A_log', 'D', 'dt_bias'):
+            return out(MODEL)
+        if leafname == 'scale':
+            return out(MODEL)
+    # --- norms / scalars / everything else: replicated (modulo FSDP)
+    return out(None)
+
+
+def params_shardings(params, cfg, mesh, *, fsdp=True):
+    fsdp_axes = tuple(a for a in mesh.axis_names if a != MODEL) if fsdp else ()
+    return jax.tree_util.tree_map_with_path(
+        lambda p, x: NamedSharding(mesh, param_spec(p, x, cfg, mesh,
+                                                    fsdp_axes=fsdp_axes)),
+        params)
+
+
+def batch_spec(shape, mesh):
+    """Shard the leading batch dim over DP axes when divisible."""
+    dp = tuple(a for a in mesh.axis_names if a != MODEL)
+    if _div(shape[0], mesh, dp):
+        return P(dp if len(dp) > 1 else dp[0])
+    if len(dp) > 1 and _div(shape[0], mesh, dp[-1]):
+        return P(dp[-1])
+    return P()
+
+
+def batch_shardings(batch, mesh):
+    return jax.tree.map(
+        lambda x: NamedSharding(mesh, batch_spec(x.shape, mesh)), batch)
+
+
+# ------------------------------------------------------------- decode caches
+
+
+def cache_spec(path, leaf, cfg, mesh, *, long_ctx=False):
+    """Sequence-sharded KV caches; state caches shard batch/heads."""
+    keys = _path_keys(path)
+    shape = leaf.shape
+    stacked = 'blocks' in keys
+    off = 1 if stacked else 0
+    dp = tuple(a for a in mesh.axis_names if a != MODEL)
+    seq_ax = (dp + (MODEL,)) if long_ctx else (MODEL,)
+    bspec = None if long_ctx else (dp if len(dp) > 1 else dp[0])
+
+    def out(*spec):
+        spec = (None,) * off + spec
+        spec = (spec + (None,) * len(shape))[:len(shape)]
+        fixed = []
+        for dim, s in enumerate(spec):
+            if s is not None and not _div(shape[dim], mesh, s):
+                s = None
+            fixed.append(s)
+        return P(*fixed)
+
+    leafname = keys[-1]
+    if leafname in ('k', 'v'):                       # (B, Sc, K, hd)
+        return out(bspec, seq_ax if len(seq_ax) > 1 else seq_ax[0])
+    if leafname in ('ckv', 'kr'):                    # (B, Sc, r)
+        return out(bspec, seq_ax if len(seq_ax) > 1 else seq_ax[0])
+    if leafname in ('slots', 'pos'):                 # (Sc,)
+        return out(seq_ax if len(seq_ax) > 1 else seq_ax[0])
+    if leafname == 'total':
+        return out()
+    if leafname == 'h' and 'conv' not in keys:       # ssm/rglru state
+        if len(shape) - off >= 2:
+            return out(bspec, MODEL)                 # (B, h, p, n)/(B, W)
+        return out(bspec)
+    if leafname == 'conv':                           # (B, k-1, C)
+        return out(bspec, None, MODEL)
+    return out(bspec)
+
+
+def cache_shardings(cache, cfg, mesh, *, long_ctx=False):
+    return jax.tree_util.tree_map_with_path(
+        lambda p, x: NamedSharding(
+            mesh, cache_spec(p, x, cfg, mesh, long_ctx=long_ctx)), cache)
+
+
+def zero1_shardings(opt_state_shapes, param_shardings_tree, mesh):
+    """ZeRO-1: optimizer moments additionally sharded over DP axes."""
+    dp = tuple(a for a in mesh.axis_names if a != MODEL)
+
+    def shard_moment(sh, x):
+        spec = list(sh.spec) + [None] * (len(x.shape) - len(sh.spec))
+        used = set()
+        for s in spec:
+            for a in (s if isinstance(s, tuple) else (s,)):
+                used.add(a)
+        free = tuple(a for a in dp if a not in used)
+        if not free:
+            return NamedSharding(mesh, P(*spec))
+        for dim, s in enumerate(spec):
+            if s is None and _div(x.shape[dim], mesh, free):
+                spec[dim] = free if len(free) > 1 else free[0]
+                break
+        return NamedSharding(mesh, P(*spec))
+
+    import jax as _jax
+    step_sh = NamedSharding(mesh, P())
+    mu = _jax.tree.map(shard_moment, param_shardings_tree,
+                       opt_state_shapes.mu)
+    nu = _jax.tree.map(shard_moment, param_shardings_tree,
+                       opt_state_shapes.nu)
+    from repro.optim.adamw import AdamWState
+    return AdamWState(step=step_sh, mu=mu, nu=nu)

@@ -1,0 +1,131 @@
+"""Step builders: train_step / prefill_step / serve_step with full shardings.
+
+These are the functions the dry-run lowers and the launchers run.  Each
+builder returns (jitted_fn, abstract_args) so ``dryrun.py`` can
+``.lower(*abstract_args).compile()`` without allocating anything.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.launch import sharding as sh
+from repro.launch.serving import make_decode_ctx
+from repro.models.actsharding import make_mesh_policy, activation_sharding
+from repro.models.model import build_model
+from repro.optim import adamw, apply_updates, clip_by_global_norm
+from repro.optim.adamw import AdamWState
+
+
+def _ce_loss(logits, labels):
+    lp = jax.nn.log_softmax(logits.astype(jnp.float32))
+    ce = -jnp.take_along_axis(lp, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(ce)
+
+
+def abstract_params(model):
+    return jax.eval_shape(lambda: model.init(jax.random.key(0)))
+
+
+def build_train_step(cfg, mesh, batch_aval, *, lr=3e-4, remat=True,
+                     zero1=True, fsdp=True):
+    model = build_model(cfg)
+    opt = adamw(lr, weight_decay=0.1)
+    p_aval = abstract_params(model)
+    p_sh = sh.params_shardings(p_aval, cfg, mesh, fsdp=fsdp)
+    o_aval = jax.eval_shape(opt.init, p_aval)
+    o_sh = (sh.zero1_shardings(o_aval, p_sh, mesh) if zero1 else
+            AdamWState(step=NamedSharding(mesh, P()), mu=p_sh, nu=p_sh))
+    b_sh = sh.batch_shardings(batch_aval, mesh)
+
+    policy = make_mesh_policy(mesh)
+
+    def train_step(params, opt_state, batch):
+        with activation_sharding(policy):
+            def loss_fn(p):
+                logits = model.forward(p, batch, remat=remat)
+                labels = batch['labels']
+                if cfg.arch_kind == 'vlm':  # loss only over text positions
+                    logits = logits[:, -labels.shape[1]:]
+                return _ce_loss(logits, labels)
+
+            loss, grads = jax.value_and_grad(loss_fn)(params)
+            grads, gnorm = clip_by_global_norm(grads, 1.0)
+            updates, opt_state = opt.update(grads, opt_state, params)
+            params = apply_updates(params, updates)
+            return params, opt_state, {'loss': loss, 'grad_norm': gnorm}
+
+    fn = jax.jit(train_step,
+                 in_shardings=(p_sh, o_sh, b_sh),
+                 out_shardings=(p_sh, o_sh, None),
+                 donate_argnums=(0, 1))
+    return fn, model, (p_aval, o_aval, p_sh, o_sh)
+
+
+def build_prefill_step(cfg, mesh, batch_aval, *, max_len, fsdp=True):
+    model = build_model(cfg)
+    p_aval = abstract_params(model)
+    p_sh = sh.params_shardings(p_aval, cfg, mesh, fsdp=fsdp)
+    b_sh = sh.batch_shardings(batch_aval, mesh)
+    batch = batch_aval['tokens'].shape[0]
+    c_aval = jax.eval_shape(lambda: build_model(cfg).init_cache(batch,
+                                                                max_len))
+    c_sh = sh.cache_shardings(c_aval, cfg, mesh, long_ctx=False)
+
+    policy = make_mesh_policy(mesh)
+
+    def prefill_step(params, batch):
+        with activation_sharding(policy):
+            logits, cache = model.prefill(params, batch, max_len=max_len)
+            return jnp.argmax(logits, -1).astype(jnp.int32), cache
+
+    tok_sh = NamedSharding(mesh, sh.batch_spec((batch,), mesh))
+    fn = jax.jit(prefill_step, in_shardings=(p_sh, b_sh),
+                 out_shardings=(tok_sh, c_sh))
+    return fn, model, (p_aval, p_sh)
+
+
+def build_serve_step(cfg, mesh, *, batch, max_len, long_ctx=False,
+                     fsdp=True, int8_weights=False):
+    """One-token decode step: greedy-sample next token, update cache.
+
+    ``int8_weights``: serve with int8-quantized matmul weights (the paper's
+    Q pass at inference — halves weight HBM streaming, §Perf iteration).
+    ``fsdp=False`` keeps weights TP-sharded and resident (no per-layer
+    all-gather per token — the right default for latency-bound decode).
+    """
+    model = build_model(cfg)
+    p_aval = abstract_params(model)
+    if int8_weights:
+        from repro.core.quantization import quantize_params_for_serving
+        p_aval = jax.eval_shape(quantize_params_for_serving, p_aval)
+    p_sh = sh.params_shardings(p_aval, cfg, mesh, fsdp=fsdp)
+    c_aval = jax.eval_shape(lambda: model.init_cache(batch, max_len))
+    c_sh = sh.cache_shardings(c_aval, cfg, mesh, long_ctx=long_ctx)
+    ctx = make_decode_ctx(mesh, cfg, long_ctx=long_ctx)
+    tok_sh = NamedSharding(mesh, sh.batch_spec((batch,), mesh))
+    enc_aval = None
+    if cfg.arch_kind == 'encdec':
+        enc_aval = jax.ShapeDtypeStruct(
+            (batch, cfg.frontend_tokens, cfg.d_model), jnp.dtype(cfg.dtype))
+
+    policy = make_mesh_policy(mesh)
+
+    def serve_step(params, token, cur, cache, enc=None):
+        with activation_sharding(policy):
+            logits, cache = model.decode_step(params, token, cur, cache,
+                                              enc=enc, ctx=ctx)
+            return jnp.argmax(logits, -1).astype(jnp.int32), cache
+
+    in_sh = [p_sh, tok_sh, NamedSharding(mesh, P()), c_sh]
+    avals = [p_aval, jax.ShapeDtypeStruct((batch,), jnp.int32),
+             jax.ShapeDtypeStruct((), jnp.int32), c_aval]
+    if enc_aval is not None:
+        in_sh.append(NamedSharding(mesh, sh.batch_spec(enc_aval.shape, mesh)))
+        avals.append(enc_aval)
+    fn = jax.jit(serve_step, in_shardings=tuple(in_sh),
+                 out_shardings=(tok_sh, c_sh), donate_argnums=(3,))
+    return fn, model, (avals, in_sh)

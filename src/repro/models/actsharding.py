@@ -1,0 +1,98 @@
+"""Activation-sharding policy hook.
+
+Model code calls ``shard_act(x, kind)`` at layer boundaries; by default it
+is a no-op (CPU tests, single device).  The launcher installs a policy that
+applies ``jax.lax.with_sharding_constraint`` — batch over the DP axes on the
+residual stream — which anchors GSPMD's propagation so FSDP'd weights are
+all-gathered per layer instead of activations being replicated (the
+catastrophic inversion the dry-run exposed for unconstrained graphs).
+"""
+from __future__ import annotations
+
+import contextlib
+from typing import Callable
+
+_POLICY: Callable | None = None
+_MESH = None
+
+
+def set_policy(fn: Callable | None, mesh=None):
+    global _POLICY, _MESH
+    _POLICY = fn
+    _MESH = mesh
+
+
+@contextlib.contextmanager
+def activation_sharding(fn: Callable, mesh=None):
+    global _POLICY, _MESH
+    prev, prev_mesh = _POLICY, _MESH
+    _POLICY, _MESH = fn, mesh if mesh is not None else getattr(
+        fn, 'mesh', None)
+    try:
+        yield
+    finally:
+        _POLICY, _MESH = prev, prev_mesh
+
+
+def shard_act(x, kind: str = 'residual'):
+    if _POLICY is None:
+        return x
+    return _POLICY(x, kind)
+
+
+def current_mesh():
+    """Mesh installed with the active policy (None on single device)."""
+    return _MESH
+
+
+def make_mesh_policy(mesh):
+    """Standard policy: batch dim over DP axes, features unsharded (TP on
+    features emerges from the weight shardings); vocab-sharded logits."""
+    import jax
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    dp = tuple(a for a in mesh.axis_names if a != 'model')
+    dps = dp if len(dp) > 1 else dp[0]
+
+    def policy(x, kind):
+        if kind == 'residual':                       # (B, S, D)
+            if x.ndim == 3 and x.shape[0] % _size(mesh, dp) == 0:
+                return jax.lax.with_sharding_constraint(
+                    x, NamedSharding(mesh, P(dps, None, None)))
+            return x
+        if kind == 'residual1':                      # (B, D) decode
+            if x.shape[0] % _size(mesh, dp) == 0:
+                return jax.lax.with_sharding_constraint(
+                    x, NamedSharding(mesh, P(dps, None)))
+            return x
+        if kind == 'moe_buf':                        # (E, C, D) dispatch buf
+            E, C = x.shape[0], x.shape[1]
+            m = mesh.shape['model']
+            if E % m == 0 and C % _size(mesh, dp) == 0:
+                return jax.lax.with_sharding_constraint(
+                    x, NamedSharding(mesh, P('model', dps, None)))
+            full = dp + ('model',)
+            if C % _size(mesh, full) == 0:
+                return jax.lax.with_sharding_constraint(
+                    x, NamedSharding(mesh, P(None, full, None)))
+            if C % m == 0:
+                return jax.lax.with_sharding_constraint(
+                    x, NamedSharding(mesh, P(None, 'model', None)))
+            return x
+        if kind == 'logits':                         # (..., vocab)
+            spec = (dps,) + (None,) * (x.ndim - 2) + ('model',)
+            if x.shape[0] % _size(mesh, dp) == 0 \
+                    and x.shape[-1] % mesh.shape['model'] == 0:
+                return jax.lax.with_sharding_constraint(
+                    x, NamedSharding(mesh, P(*spec)))
+            return x
+        return x
+
+    policy.mesh = mesh
+    return policy
+
+
+def _size(mesh, axes):
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n

@@ -1,0 +1,446 @@
+"""Attention: GQA (global / sliding-window) and MLA (deepseek-v3).
+
+Three execution modes:
+  * train/prefill — chunked online-softmax attention (flash-style in pure
+    JAX: O(S·chunk) logits memory instead of O(S²), which is what lets the
+    32k-prefill cells fit in the dry-run memory analysis).
+  * decode — one-token attention against a cache.  The cache is
+    **sequence-sharded** across the 'model' axis in production; the decode
+    attention is written as local-partials + softmax-merge so the launcher
+    can wrap it in shard_map (``ctx['decode_attn']`` injection).  The default
+    implementation here is the single-device reference of the same math.
+
+Caches store an absolute-position vector ``pos`` (-1 = empty); sliding-window
+layers allocate only ``window`` slots and write ring-buffer style
+(slot = pos % window), which is what makes 500k-token decode of the
+local-majority archs (gemma2/3, mixtral) memory-feasible.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense, he_init, init_dense, rope, softcap
+
+NEG_INF = -1e30
+
+
+# ----------------------------------------------------------------------- params
+
+
+def init_attention(key, cfg, dtype=jnp.float32):
+    d, H, K, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    bias = cfg.qkv_bias
+    return {
+        'wq': init_dense(ks[0], d, H * hd, bias=bias, dtype=dtype),
+        'wk': init_dense(ks[1], d, K * hd, bias=bias, dtype=dtype),
+        'wv': init_dense(ks[2], d, K * hd, bias=bias, dtype=dtype),
+        'wo': init_dense(ks[3], H * hd, d, dtype=dtype),
+    }
+
+
+def init_mla(key, cfg, dtype=jnp.float32):
+    d, H = cfg.d_model, cfg.num_heads
+    r_q, r_kv = cfg.q_lora_rank, cfg.kv_lora_rank
+    dr, dn, dv = cfg.rope_head_dim, cfg.nope_head_dim, cfg.v_head_dim
+    ks = jax.random.split(key, 6)
+    return {
+        'wq_a': init_dense(ks[0], d, r_q, dtype=dtype),
+        'q_norm': {'scale': jnp.ones((r_q,), dtype)},
+        'wq_b': init_dense(ks[1], r_q, H * (dr + dn), dtype=dtype),
+        'wkv_a': init_dense(ks[2], d, r_kv + dr, dtype=dtype),
+        'kv_norm': {'scale': jnp.ones((r_kv,), dtype)},
+        # up-projections from the latent, kept as per-head tensors so decode
+        # can use the absorbed formulation.
+        'wk_b': he_init(ks[3], (r_kv, H, dn), r_kv, dtype),
+        'wv_b': he_init(ks[4], (r_kv, H, dv), r_kv, dtype),
+        'wo': init_dense(ks[5], H * dv, d, dtype=dtype),
+    }
+
+
+# ------------------------------------------------- chunked attention (train/prefill)
+
+
+def chunked_attention(q, k, v, q_pos, k_pos, *, causal=True, window=0,
+                      attn_softcap=0.0, chunk=512):
+    """Online-softmax attention over KV chunks.
+
+    q: (B,S,H,Dq)  k: (B,T,K,Dq)  v: (B,T,K,Dv)  q_pos: (S,)  k_pos: (T,)
+    Returns (B,S,H,Dv). GQA via H = K*g. k_pos == -1 marks padding.
+    """
+    B, S, H, Dq = q.shape
+    T, K, Dv = k.shape[1], k.shape[2], v.shape[-1]
+    g = H // K
+    chunk = min(chunk, T)
+    if T % chunk:
+        pad = chunk - T % chunk
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k_pos = jnp.pad(k_pos, (0, pad), constant_values=-1)
+        T += pad
+    nc = T // chunk
+    qg = q.reshape(B, S, K, g, Dq) * (Dq ** -0.5)
+
+    ks = k.reshape(B, nc, chunk, K, Dq).transpose(1, 0, 2, 3, 4)
+    vs = v.reshape(B, nc, chunk, K, Dv).transpose(1, 0, 2, 3, 4)
+    ps = k_pos.reshape(nc, chunk)
+
+    def body(carry, xs):
+        m, l, acc = carry
+        kc, vc, pc = xs
+        logits = jnp.einsum('bskgd,bckd->bskgc', qg, kc.astype(qg.dtype),
+                            preferred_element_type=jnp.float32)
+        if attn_softcap:
+            logits = softcap(logits, attn_softcap)
+        valid = pc[None, :] >= 0
+        if causal:
+            valid &= pc[None, :] <= q_pos[:, None]
+        if window:
+            valid &= pc[None, :] > q_pos[:, None] - window
+        logits = jnp.where(valid[None, :, None, None, :], logits, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(logits, axis=-1))
+        p = jnp.exp(logits - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l = l * corr + jnp.sum(p, axis=-1)
+        acc = acc * corr[..., None] + jnp.einsum(
+            'bskgc,bckv->bskgv', p.astype(vc.dtype), vc).astype(acc.dtype)
+        return (m_new, l, acc), None
+
+    m0 = jnp.full((B, S, K, g), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, S, K, g), jnp.float32)
+    a0 = jnp.zeros((B, S, K, g, Dv), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0), (ks, vs, ps))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.reshape(B, S, H, Dv).astype(q.dtype)
+
+
+# --------------------------------------------------------------- decode attention
+
+
+def decode_attn_reference(q, new_k, new_v, cache, cur, *,
+                          window=0, attn_softcap=0.0, axis_names=()):
+    """One-token attention + cache write; local-partials + softmax-merge.
+
+    q: (B,H,Dq); new_k/new_v: (B,K,Dq/Dv); cache: {'k','v','meta'[,scales]}
+    with k (B,Sc,K,Dq) (int8 + 'k_s'/'v_s' scales when kv_cache_bits=8).
+    When ``axis_names`` is non-empty this body runs inside shard_map with
+    the cache sequence dim sharded over those axes: slot indices are then
+    *local* (meta['slots'] carries the global offsets), and partial stats
+    merge with pmax/psum.  Returns (out, new_cache).
+    """
+    cache_k, cache_v, meta = cache['k'], cache['v'], cache['meta']
+    quantized = 'k_s' in cache
+    B, Sc, K, Dq = cache_k.shape
+    H = q.shape[1]
+    g = H // K
+    Dv = cache_v.shape[-1]
+
+    # ring-buffer write: global slot = cur % n_slots; each device owns the
+    # meta['slots'] range.  Single-slot dynamic-update-slice (in-place on
+    # TPU) — a full-cache where() rewrite costs ~0.5 GB/layer/step at 32k
+    # ctx (§Perf iteration 6).
+    slot_ids = meta['slots']           # (Sc,) global slot indices owned here
+    positions = meta['pos']            # (Sc,) absolute pos stored per slot
+    write_slot = jnp.mod(cur, meta['total'])
+    offset = slot_ids[0]
+    loc = jnp.clip(write_slot - offset, 0, Sc - 1)
+    owned = (write_slot >= offset) & (write_slot - offset < Sc)
+
+    def wr(buf, new, axis=1):
+        curslice = jax.lax.dynamic_slice_in_dim(buf, loc, 1, axis=axis)
+        exp = jnp.expand_dims(new, axis)
+        upd = jnp.where(owned, exp.astype(buf.dtype), curslice)
+        return jax.lax.dynamic_update_slice_in_dim(buf, upd, loc, axis=axis)
+
+    new_cache = dict(cache)
+    if quantized:
+        nk_q, nk_s = kv_quantize(new_k)
+        nv_q, nv_s = kv_quantize(new_v)
+        cache_k = wr(cache_k, nk_q)
+        cache_v = wr(cache_v, nv_q)
+        new_cache['k_s'] = wr(cache['k_s'], nk_s)
+        new_cache['v_s'] = wr(cache['v_s'], nv_s)
+        k_eff = kv_dequantize(cache_k, new_cache['k_s'], q.dtype)
+        v_eff = kv_dequantize(cache_v, new_cache['v_s'], q.dtype)
+    else:
+        cache_k = wr(cache_k, new_k)
+        cache_v = wr(cache_v, new_v)
+        k_eff, v_eff = cache_k, cache_v
+    pos_upd = jnp.where(owned, cur[None], jax.lax.dynamic_slice_in_dim(
+        positions, loc, 1))
+    positions = jax.lax.dynamic_update_slice_in_dim(positions, pos_upd,
+                                                    loc, axis=0)
+    new_cache['k'], new_cache['v'] = cache_k, cache_v
+    new_cache['meta'] = dict(meta, pos=positions)
+
+    qg = q.reshape(B, K, g, Dq) * (Dq ** -0.5)
+    logits = jnp.einsum('bkgd,bskd->bkgs', qg, k_eff.astype(qg.dtype),
+                        preferred_element_type=jnp.float32)
+    if attn_softcap:
+        logits = softcap(logits, attn_softcap)
+    valid = (positions >= 0) & (positions <= cur)
+    if window:
+        valid &= positions > cur - window
+    logits = jnp.where(valid[None, None, None, :], logits, NEG_INF)
+
+    m_loc = jnp.max(logits, axis=-1)
+    m = m_loc
+    for ax in axis_names:
+        m = jax.lax.pmax(m, ax)
+    m = jnp.maximum(m, -1e29)
+    p = jnp.exp(logits - m[..., None])
+    l = jnp.sum(p, axis=-1)
+    o = jnp.einsum('bkgs,bskv->bkgv', p.astype(v_eff.dtype),
+                   v_eff).astype(jnp.float32)
+    if axis_names:
+        l = jax.lax.psum(l, axis_names)
+        o = jax.lax.psum(o, axis_names)
+    out = (o / jnp.maximum(l, 1e-30)[..., None]).reshape(B, H, Dv)
+    return out.astype(q.dtype), new_cache
+
+
+def decode_mla_reference(q_nope_lat, q_rope, new_ckv, new_kr, cache, cur, *,
+                         axis_names=()):
+    """Absorbed-MLA decode: attention in the compressed latent space.
+
+    q_nope_lat: (B,H,r) — q_nope already absorbed through wk_b;
+    q_rope: (B,H,dr); cache: {'ckv': (B,Sc,r), 'kr': (B,Sc,dr), 'meta'}.
+    Returns (out_latent (B,H,r), new_cache) — caller up-projects via wv_b.
+    """
+    cache_ckv, cache_kr, meta = cache['ckv'], cache['kr'], cache['meta']
+    B, Sc, r = cache_ckv.shape
+    H = q_rope.shape[1]
+    slot_ids, positions = meta['slots'], meta['pos']
+    write_slot = jnp.mod(cur, meta['total'])
+    offset = slot_ids[0]
+    loc = jnp.clip(write_slot - offset, 0, Sc - 1)
+    owned = (write_slot >= offset) & (write_slot - offset < Sc)
+
+    def wr(cache_, new):
+        curslice = jax.lax.dynamic_slice_in_dim(cache_, loc, 1, axis=1)
+        upd = jnp.where(owned, new[:, None].astype(cache_.dtype), curslice)
+        return jax.lax.dynamic_update_slice_in_dim(cache_, upd, loc, axis=1)
+
+    cache_ckv = wr(cache_ckv, new_ckv)
+    cache_kr = wr(cache_kr, new_kr)
+    pos_upd = jnp.where(owned, cur[None], jax.lax.dynamic_slice_in_dim(
+        positions, loc, 1))
+    positions = jax.lax.dynamic_update_slice_in_dim(positions, pos_upd,
+                                                    loc, axis=0)
+
+    # deepseek scales by 1/sqrt(rope_dim + nope_dim); the caller pre-scales q
+    # (before absorption), so the merge here is a plain sum of dot products.
+    logits = (jnp.einsum('bhr,bsr->bhs', q_nope_lat.astype(jnp.float32),
+                         cache_ckv.astype(jnp.float32))
+              + jnp.einsum('bhd,bsd->bhs', q_rope.astype(jnp.float32),
+                           cache_kr.astype(jnp.float32)))
+    valid = (positions >= 0) & (positions <= cur)
+    logits = jnp.where(valid[None, None, :], logits, NEG_INF)
+    m = jnp.max(logits, axis=-1)
+    for ax in axis_names:
+        m = jax.lax.pmax(m, ax)
+    m = jnp.maximum(m, -1e29)
+    p = jnp.exp(logits - m[..., None])
+    l = jnp.sum(p, axis=-1)
+    o = jnp.einsum('bhs,bsr->bhr', p, cache_ckv.astype(jnp.float32))
+    if axis_names:
+        l = jax.lax.psum(l, axis_names)
+        o = jax.lax.psum(o, axis_names)
+    out_lat = o / jnp.maximum(l, 1e-30)[..., None]
+    return out_lat, {'ckv': cache_ckv, 'kr': cache_kr,
+                     'meta': dict(meta, pos=positions)}
+
+
+# ------------------------------------------------------------------ GQA block apply
+
+
+def gqa_forward(p, x, positions, cfg, *, kind, quant=(0, 0), kv=None):
+    """Train/prefill attention. Returns (out, (k, v)) — k/v for cache fill.
+
+    ``kv`` overrides k/v inputs (cross-attention: kv = encoder output tuple).
+    """
+    B, S, d = x.shape
+    H, K, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    q = dense(p['wq'], x, quant=quant).reshape(B, S, H, hd)
+    if kv is None:
+        k = dense(p['wk'], x, quant=quant).reshape(B, S, K, hd)
+        v = dense(p['wv'], x, quant=quant).reshape(B, S, K, hd)
+        q = rope(q, positions, theta=cfg.rope_theta)
+        k = rope(k, positions, theta=cfg.rope_theta)
+        k_pos, causal = positions, kind != 'encoder'
+    else:
+        enc, enc_pos = kv
+        k = dense(p['wk'], enc, quant=quant).reshape(B, enc.shape[1], K, hd)
+        v = dense(p['wv'], enc, quant=quant).reshape(B, enc.shape[1], K, hd)
+        k_pos, causal = enc_pos, False
+    window = cfg.window if kind == 'local' else 0
+    out = chunked_attention(q, k, v, positions, k_pos, causal=causal,
+                            window=window, attn_softcap=cfg.attn_softcap)
+    out = dense(p['wo'], out.reshape(B, S, H * hd), quant=quant)
+    return out, (k, v)
+
+
+def gqa_decode(p, x, cur, cfg, *, kind, cache, ctx, quant=(0, 0)):
+    """One-token decode. x: (B, d). Returns (out, new_cache)."""
+    B, d = x.shape
+    H, K, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    pos1 = cur[None] if cur.ndim == 0 else cur
+    q = dense(p['wq'], x[:, None], quant=quant).reshape(B, 1, H, hd)
+    nk = dense(p['wk'], x[:, None], quant=quant).reshape(B, 1, K, hd)
+    nv = dense(p['wv'], x[:, None], quant=quant).reshape(B, 1, K, hd)
+    q = rope(q, pos1, theta=cfg.rope_theta)[:, 0]
+    nk = rope(nk, pos1, theta=cfg.rope_theta)[:, 0]
+    nv = nv[:, 0]
+    window = cfg.window if kind == 'local' else 0
+    fn = ctx.get('decode_attn', decode_attn_reference)
+    out, new_cache = fn(q, nk, nv, cache, cur, window=window,
+                        attn_softcap=cfg.attn_softcap)
+    out = dense(p['wo'], out.reshape(B, H * hd), quant=quant)
+    return out, new_cache
+
+
+def gqa_cross_decode(p, x, enc, enc_pos, cfg, *, quant=(0, 0)):
+    """Cross-attention for one decoder token against full encoder output."""
+    B, d = x.shape
+    H, K, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    q = dense(p['wq'], x, quant=quant).reshape(B, 1, H, hd)
+    k = dense(p['wk'], enc, quant=quant).reshape(B, enc.shape[1], K, hd)
+    v = dense(p['wv'], enc, quant=quant).reshape(B, enc.shape[1], K, hd)
+    out = chunked_attention(q, k, v, jnp.zeros((1,), jnp.int32), enc_pos,
+                            causal=False)
+    return dense(p['wo'], out.reshape(B, H * hd), quant=quant)
+
+
+# ------------------------------------------------------------------ MLA block apply
+
+
+def mla_forward(p, x, positions, cfg, *, quant=(0, 0)):
+    """Train/prefill MLA. Returns (out, (ckv, k_rope)) for cache fill."""
+    B, S, d = x.shape
+    H = cfg.num_heads
+    dr, dn, dv = cfg.rope_head_dim, cfg.nope_head_dim, cfg.v_head_dim
+    from repro.models.layers import rms_norm
+    cq = rms_norm(p['q_norm'], dense(p['wq_a'], x, quant=quant), cfg.norm_eps)
+    q = dense(p['wq_b'], cq, quant=quant).reshape(B, S, H, dr + dn)
+    q_rope, q_nope = q[..., :dr], q[..., dr:]
+    q_rope = rope(q_rope, positions, theta=cfg.rope_theta)
+
+    kv_a = dense(p['wkv_a'], x, quant=quant)
+    ckv = rms_norm(p['kv_norm'], kv_a[..., :cfg.kv_lora_rank], cfg.norm_eps)
+    k_rope = rope(kv_a[..., None, cfg.kv_lora_rank:], positions,
+                  theta=cfg.rope_theta)[..., 0, :]                  # (B,S,dr)
+
+    k_nope = jnp.einsum('bsr,rhn->bshn', ckv, p['wk_b'].astype(ckv.dtype))
+    v = jnp.einsum('bsr,rhv->bshv', ckv, p['wv_b'].astype(ckv.dtype))
+    k = jnp.concatenate(
+        [jnp.broadcast_to(k_rope[:, :, None], (B, S, H, dr)), k_nope], axis=-1)
+    q_full = jnp.concatenate([q_rope, q_nope], axis=-1)
+    out = chunked_attention(q_full, k, v, positions, positions, causal=True)
+    out = dense(p['wo'], out.reshape(B, S, H * dv), quant=quant)
+    return out, (ckv, k_rope)
+
+
+def mla_decode(p, x, cur, cfg, *, cache, ctx, quant=(0, 0)):
+    B, d = x.shape
+    H = cfg.num_heads
+    dr, dn, dv = cfg.rope_head_dim, cfg.nope_head_dim, cfg.v_head_dim
+    from repro.models.layers import rms_norm
+    pos1 = cur[None]
+    cq = rms_norm(p['q_norm'], dense(p['wq_a'], x, quant=quant), cfg.norm_eps)
+    q = dense(p['wq_b'], cq, quant=quant).reshape(B, H, dr + dn)
+    scale = (dr + dn) ** -0.5
+    q_rope = rope(q[None, ..., :dr], pos1, theta=cfg.rope_theta)[0] * scale
+    q_nope = q[..., dr:] * scale
+    # absorb through wk_b: (B,H,dn) x (r,H,dn) -> (B,H,r)
+    q_lat = jnp.einsum('bhn,rhn->bhr', q_nope, p['wk_b'].astype(q_nope.dtype))
+
+    kv_a = dense(p['wkv_a'], x, quant=quant)
+    new_ckv = rms_norm(p['kv_norm'], kv_a[..., :cfg.kv_lora_rank], cfg.norm_eps)
+    new_kr = rope(kv_a[:, None, None, cfg.kv_lora_rank:], pos1,
+                  theta=cfg.rope_theta)[:, 0, 0]
+
+    fn = ctx.get('decode_mla', decode_mla_reference)
+    out_lat, new_cache = fn(q_lat, q_rope, new_ckv, new_kr, cache, cur)
+    out = jnp.einsum('bhr,rhv->bhv', out_lat.astype(x.dtype),
+                     p['wv_b'].astype(x.dtype))
+    out = dense(p['wo'], out.reshape(B, H * dv), quant=quant)
+    return out, new_cache
+
+
+# ------------------------------------------------------------------- cache builders
+
+
+def make_cache_meta(n_slots: int, local_offset: int = 0, local_len: int | None = None):
+    ll = n_slots if local_len is None else local_len
+    return {'slots': local_offset + jnp.arange(ll, dtype=jnp.int32),
+            'pos': jnp.full((ll,), -1, jnp.int32),
+            'total': jnp.asarray(n_slots, jnp.int32)}
+
+
+def kv_quantize(x, axis=-1):
+    """int8-quantize along head_dim with per-(token, head) scales."""
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=axis)
+    s = jnp.maximum(amax, 1e-8) / 127.0
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / s[..., None]),
+                 -128, 127).astype(jnp.int8)
+    return q, s.astype(jnp.float32)
+
+
+def kv_dequantize(q, s, dtype):
+    return (q.astype(jnp.float32) * s[..., None]).astype(dtype)
+
+
+def init_attn_cache(cfg, batch, kind, max_len, dtype):
+    n = min(cfg.window, max_len) if kind == 'local' else max_len
+    K, hd = cfg.num_kv_heads, cfg.head_dim
+    c = {'k': jnp.zeros((batch, n, K, hd), dtype),
+         'v': jnp.zeros((batch, n, K, hd), dtype),
+         'meta': make_cache_meta(n)}
+    if cfg.kv_cache_bits == 8:
+        # int8 KV cache (the paper's Q pass at the cache level): halves the
+        # dominant decode HBM traffic; per-(token, head) scales.
+        c['k'] = jnp.zeros((batch, n, K, hd), jnp.int8)
+        c['v'] = jnp.zeros((batch, n, K, hd), jnp.int8)
+        c['k_s'] = jnp.zeros((batch, n, K), jnp.float32)
+        c['v_s'] = jnp.zeros((batch, n, K), jnp.float32)
+    return c
+
+
+def init_mla_cache(cfg, batch, max_len, dtype):
+    return {'ckv': jnp.zeros((batch, max_len, cfg.kv_lora_rank), dtype),
+            'kr': jnp.zeros((batch, max_len, cfg.rope_head_dim), dtype),
+            'meta': make_cache_meta(max_len)}
+
+
+def prefill_cache_write(cache, k, v, positions):
+    """Write prefill k/v (B,S,K,D) into a fresh cache (ring-aware)."""
+    Sc = cache['k'].shape[1]
+    S = k.shape[1]
+    take = min(S, Sc)
+    kt, vt = k[:, S - take:], v[:, S - take:]
+    pt = positions[S - take:]
+    slots = jnp.mod(pt, cache['meta']['total'])
+    out = dict(cache)
+    if 'k_s' in cache:
+        kq, ks = kv_quantize(kt)
+        vq, vs = kv_quantize(vt)
+        out['k'] = cache['k'].at[:, slots].set(kq)
+        out['v'] = cache['v'].at[:, slots].set(vq)
+        out['k_s'] = cache['k_s'].at[:, slots].set(ks)
+        out['v_s'] = cache['v_s'].at[:, slots].set(vs)
+    else:
+        out['k'] = cache['k'].at[:, slots].set(kt.astype(cache['k'].dtype))
+        out['v'] = cache['v'].at[:, slots].set(vt.astype(cache['v'].dtype))
+    out['meta'] = dict(cache['meta'],
+                       pos=cache['meta']['pos'].at[slots].set(pt))
+    return out
+
+
+def prefill_mla_cache_write(cache, ckv, kr, positions):
+    S = ckv.shape[1]
+    slots = jnp.mod(positions, cache['meta']['total'])
+    c1 = cache['ckv'].at[:, slots].set(ckv.astype(cache['ckv'].dtype))
+    c2 = cache['kr'].at[:, slots].set(kr.astype(cache['kr'].dtype))
+    pos = cache['meta']['pos'].at[slots].set(positions)
+    return {'ckv': c1, 'kr': c2, 'meta': dict(cache['meta'], pos=pos)}

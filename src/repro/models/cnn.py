@@ -1,0 +1,165 @@
+"""CIFAR-style CNN family (ResNet / VGG / MobileNetV2) — the paper's own
+architectures, in functional JAX.
+
+Notes vs. the paper: BatchNorm is replaced by GroupNorm(8) to keep the model
+purely functional (no running stats in the training state) — this does not
+interact with the compression-order findings, which are about D/P/Q/E
+sequencing.  Every conv/fc routes through the same fake-quant hook as the
+transformers (cfg.w_bits / cfg.a_bits), channel pruning physically shrinks
+conv channels, and early-exit heads hang off stage boundaries
+(cfg.exit_stages).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quantization import fake_quant_act, fake_quant_weight
+
+
+def _conv_init(key, kh, kw, cin, cout, dtype=jnp.float32):
+    fan = kh * kw * cin
+    return {'w': jax.random.normal(key, (kh, kw, cin, cout), dtype)
+            * math.sqrt(2.0 / fan),
+            'b': jnp.zeros((cout,), dtype)}
+
+
+def conv(p, x, *, stride=1, quant=(0, 0), groups=1):
+    w_bits, a_bits = quant
+    w = p['w']
+    if w_bits:
+        w = fake_quant_weight(w, w_bits, axis=-1)
+    if a_bits:
+        x = fake_quant_act(x, a_bits)
+    y = jax.lax.conv_general_dilated(
+        x, w.astype(x.dtype), (stride, stride), 'SAME',
+        feature_group_count=groups,
+        dimension_numbers=('NHWC', 'HWIO', 'NHWC'))
+    return y + p['b'].astype(y.dtype)
+
+
+def group_norm(p, x, groups=8, eps=1e-5):
+    B, H, W, C = x.shape
+    g = math.gcd(groups, C)
+    xg = x.reshape(B, H, W, g, C // g)
+    mu = xg.mean(axis=(1, 2, 4), keepdims=True)
+    var = xg.var(axis=(1, 2, 4), keepdims=True)
+    xg = (xg - mu) * jax.lax.rsqrt(var + eps)
+    x = xg.reshape(B, H, W, C)
+    return x * p['scale'] + p['bias']
+
+
+def _norm_init(c, dtype=jnp.float32):
+    return {'scale': jnp.ones((c,), dtype), 'bias': jnp.zeros((c,), dtype)}
+
+
+def _fc_init(key, din, dout, dtype=jnp.float32):
+    return {'w': jax.random.normal(key, (din, dout), dtype)
+            * math.sqrt(1.0 / din),
+            'b': jnp.zeros((dout,), dtype)}
+
+
+def fc(p, x, *, quant=(0, 0)):
+    w_bits, a_bits = quant
+    w = p['w']
+    if w_bits:
+        w = fake_quant_weight(w, w_bits, axis=-1)
+    if a_bits:
+        x = fake_quant_act(x, a_bits)
+    return x @ w.astype(x.dtype) + p['b'].astype(x.dtype)
+
+
+# ------------------------------------------------------------------------ init
+
+
+def init_cnn(key, cfg):
+    ks = iter(jax.random.split(key, 4096))
+    p = {'stem': _conv_init(next(ks), 3, 3, cfg.in_channels,
+                            cfg.stage_widths[0]),
+         'stem_norm': _norm_init(cfg.stage_widths[0])}
+    stages = []
+    cin = cfg.stage_widths[0]
+    for s, (n, w) in enumerate(zip(cfg.stage_blocks, cfg.stage_widths)):
+        blocks = []
+        for b in range(n):
+            stride = 2 if (b == 0 and s > 0) else 1
+            if cfg.kind == 'resnet':
+                blk = {'conv1': _conv_init(next(ks), 3, 3, cin, w),
+                       'n1': _norm_init(w),
+                       'conv2': _conv_init(next(ks), 3, 3, w, w),
+                       'n2': _norm_init(w)}
+                if stride != 1 or cin != w:
+                    blk['proj'] = _conv_init(next(ks), 1, 1, cin, w)
+            elif cfg.kind == 'vgg':
+                blk = {'conv1': _conv_init(next(ks), 3, 3, cin, w),
+                       'n1': _norm_init(w)}
+            else:  # mobilenet inverted residual
+                e = cin * cfg.expand_ratio
+                blk = {'expand': _conv_init(next(ks), 1, 1, cin, e),
+                       'n1': _norm_init(e),
+                       'dw': _conv_init(next(ks), 3, 3, 1, e),
+                       'n2': _norm_init(e),
+                       'project': _conv_init(next(ks), 1, 1, e, w),
+                       'n3': _norm_init(w)}
+            blocks.append(blk)
+            cin = w
+        stages.append(blocks)
+    p['stages'] = stages
+    p['head'] = _fc_init(next(ks), cin, cfg.num_classes)
+    if cfg.exit_stages:
+        p['exits'] = {str(s): _fc_init(next(ks), cfg.stage_widths[s],
+                                       cfg.num_classes)
+                      for s in cfg.exit_stages}
+    return p
+
+
+# -------------------------------------------------------------------- forward
+
+
+def _block_forward(blk, x, kind, stride, quant, expand_ratio):
+    if kind == 'resnet':
+        h = jax.nn.relu(group_norm(blk['n1'],
+                                   conv(blk['conv1'], x, stride=stride,
+                                        quant=quant)))
+        h = group_norm(blk['n2'], conv(blk['conv2'], h, quant=quant))
+        skip = conv(blk['proj'], x, stride=stride, quant=quant) \
+            if 'proj' in blk else x
+        return jax.nn.relu(h + skip)
+    if kind == 'vgg':
+        h = jax.nn.relu(group_norm(blk['n1'],
+                                   conv(blk['conv1'], x, stride=stride,
+                                        quant=quant)))
+        return h
+    # mobilenet
+    e = blk['expand']['w'].shape[-1]
+    h = jax.nn.relu6(group_norm(blk['n1'], conv(blk['expand'], x, quant=quant)))
+    h = jax.nn.relu6(group_norm(blk['n2'],
+                                conv(blk['dw'], h, stride=stride, quant=quant,
+                                     groups=e)))
+    h = group_norm(blk['n3'], conv(blk['project'], h, quant=quant))
+    if stride == 1 and x.shape[-1] == h.shape[-1]:
+        h = h + x
+    return h
+
+
+def cnn_forward(params, cfg, x, *, collect_exits=False):
+    """x: (B, H, W, C) -> logits (B, classes); optionally exit logits dict."""
+    quant = (cfg.w_bits, cfg.a_bits)
+    h = jax.nn.relu(group_norm(params['stem_norm'],
+                               conv(params['stem'], x, quant=quant)))
+    exits = {}
+    for s, blocks in enumerate(params['stages']):
+        for b, blk in enumerate(blocks):
+            stride = 2 if (b == 0 and s > 0) else 1
+            h = _block_forward(blk, h, cfg.kind, stride, quant,
+                               cfg.expand_ratio)
+        if collect_exits and 'exits' in params and str(s) in params['exits']:
+            feat = h.mean(axis=(1, 2))
+            exits[s] = fc(params['exits'][str(s)], feat, quant=quant)
+    feat = h.mean(axis=(1, 2))
+    logits = fc(params['head'], feat, quant=quant)
+    if collect_exits:
+        return logits, exits
+    return logits

@@ -1,0 +1,170 @@
+"""Core functional layers (pure JAX, params as pytrees of jnp arrays).
+
+Every matmul routes through :func:`dense`, which applies the paper's
+fixed-point fake-quantization when ``quant=(w_bits, a_bits)`` is set — this
+is the single integration point of the Q pass with every architecture.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quantization import fake_quant_act, fake_quant_weight
+
+# --------------------------------------------------------------------------- init
+
+
+def he_init(key, shape, fan_in, dtype=jnp.float32):
+    return jax.random.normal(key, shape, dtype) * (1.0 / math.sqrt(max(fan_in, 1)))
+
+
+def init_dense(key, d_in, d_out, *, bias=False, dtype=jnp.float32):
+    p = {'w': he_init(key, (d_in, d_out), d_in, dtype)}
+    if bias:
+        p['b'] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def init_norm(d, dtype=jnp.float32):
+    return {'scale': jnp.ones((d,), dtype)}
+
+
+# ------------------------------------------------------------------------- apply
+
+
+def dense(p, x, *, quant=(0, 0)):
+    """x @ w (+b), with optional fake-quant of weight (per out-channel) and act.
+
+    Also accepts the int8 serving form {'w_q': int8, 'scale': (out,)} from
+    core.quantization.quantize_params_for_serving — weights stream from HBM
+    as int8 and dequantize in-register (Pallas quant_matmul on TPU).
+    """
+    w_bits, a_bits = quant
+    if 'w_q' in p:
+        w = p['w_q'].astype(x.dtype) * p['scale'].astype(x.dtype)
+        if a_bits:
+            x = fake_quant_act(x, a_bits)
+        y = jnp.einsum('...d,df->...f', x, w)
+        if 'b' in p:
+            y = y + p['b'].astype(x.dtype)
+        return y
+    w = p['w']
+    if w_bits:
+        w = fake_quant_weight(w, w_bits, axis=-1)
+    if a_bits:
+        x = fake_quant_act(x, a_bits)
+    y = jnp.einsum('...d,df->...f', x, w.astype(x.dtype))
+    if 'b' in p:
+        y = y + p['b'].astype(x.dtype)
+    return y
+
+
+def rms_norm(p, x, eps=1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * p['scale'].astype(jnp.float32)).astype(dt)
+
+
+def softcap(x, cap: float):
+    if not cap:
+        return x
+    return cap * jnp.tanh(x / cap)
+
+
+# --------------------------------------------------------------------------- rope
+
+
+def rope(x, positions, *, theta=10_000.0):
+    """Rotary embedding. x: (..., S, H, D) or (..., H, D) with matching positions."""
+    d = x.shape[-1]
+    half = d // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freq       # (..., S, half)
+    sin, cos = jnp.sin(ang), jnp.cos(ang)
+    # broadcast over head axis: x is (..., S, H, D), ang (..., S, half)
+    sin = sin[..., None, :]
+    cos = cos[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------- mlp
+
+
+def init_mlp(key, cfg, d_ff=None, *, gated=True, dtype=jnp.float32):
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    if gated:
+        return {'wi': init_dense(ks[0], d, f, dtype=dtype),
+                'wg': init_dense(ks[1], d, f, dtype=dtype),
+                'wo': init_dense(ks[2], f, d, dtype=dtype)}
+    return {'wi': init_dense(ks[0], d, f, dtype=dtype),
+            'wo': init_dense(ks[2], f, d, dtype=dtype)}
+
+
+def mlp(p, x, *, quant=(0, 0)):
+    if 'wg' in p:  # gated (swiglu)
+        h = jax.nn.silu(dense(p['wg'], x, quant=quant)) * dense(p['wi'], x, quant=quant)
+    else:
+        h = jax.nn.gelu(dense(p['wi'], x, quant=quant))
+    return dense(p['wo'], h, quant=quant)
+
+
+# ---------------------------------------------------------------------- embedding
+
+
+def init_embedding(key, vocab, d, dtype=jnp.float32):
+    return {'table': jax.random.normal(key, (vocab, d), dtype) * 0.02}
+
+
+def embed(p, tokens, dtype):
+    return jnp.take(p['table'], tokens, axis=0).astype(dtype)
+
+
+def unembed(p, x, *, quant=(0, 0)):
+    w = p['table']
+    if quant[0]:
+        w = fake_quant_weight(w, quant[0], axis=0)
+    if quant[1]:
+        x = fake_quant_act(x, quant[1])
+    return jnp.einsum('...d,vd->...v', x, w.astype(x.dtype))
+
+
+# ------------------------------------------------------------- causal depthwise conv
+
+
+def init_conv1d(key, width, k, dtype=jnp.float32):
+    return {'w': he_init(key, (k, width), k, dtype), 'b': jnp.zeros((width,), dtype)}
+
+
+def causal_conv1d(p, x):
+    """Depthwise causal conv. x: (B, S, C) -> (B, S, C)."""
+    k = p['w'].shape[0]
+    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    # (B, S+k-1, C) -> windows: use conv_general_dilated depthwise
+    y = jax.lax.conv_general_dilated(
+        xp.transpose(0, 2, 1)[:, :, None, :],                   # (B, C, 1, S+k-1)
+        p['w'].T[:, None, None, :],                             # (C, 1, 1, k)
+        window_strides=(1, 1), padding='VALID',
+        feature_group_count=x.shape[-1],
+        dimension_numbers=('NCHW', 'OIHW', 'NCHW'))
+    y = y[:, :, 0, :].transpose(0, 2, 1)
+    return y + p['b'].astype(y.dtype)
+
+
+def conv1d_step(p, x_t, conv_state):
+    """One decode step of the causal depthwise conv.
+
+    x_t: (B, C); conv_state: (B, k-1, C) past inputs. Returns (y_t, new_state).
+    """
+    k = p['w'].shape[0]
+    window = jnp.concatenate([conv_state, x_t[:, None, :]], axis=1)  # (B,k,C)
+    y = jnp.einsum('bkc,kc->bc', window, p['w'].astype(x_t.dtype))
+    y = y + p['b'].astype(y.dtype)
+    new_state = window[:, 1:k, :]
+    return y, new_state

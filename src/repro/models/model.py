@@ -1,0 +1,79 @@
+"""Unified model API: ``build_model(cfg) -> Model`` for any ModelConfig.
+
+The Model bundles init / forward / prefill / decode closures so the
+training loop, serving path, compression chain, and dry-run all drive
+architectures uniformly.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import transformer as tfm
+
+
+@dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+    init: Callable                  # (key) -> params
+    forward: Callable               # (params, batch, **kw) -> logits
+    prefill: Callable               # (params, batch, max_len) -> (logits, cache)
+    decode_step: Callable           # (params, token, cur, cache, state, ctx) -> ...
+    init_cache: Callable            # (batch, max_len) -> cache
+    encode: Any = None              # encdec only
+
+
+def _batch_parts(cfg, batch):
+    """Split a batch dict into (tokens, embeds, enc_frames)."""
+    tokens = batch['tokens']
+    embeds = batch.get('patches') if cfg.arch_kind == 'vlm' else None
+    frames = batch.get('frames') if cfg.arch_kind == 'encdec' else None
+    return tokens, embeds, frames
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    def init(key):
+        return tfm.init_lm(key, cfg)
+
+    def forward(params, batch, *, remat=False, collect_hiddens=False):
+        tokens, embeds, frames = _batch_parts(cfg, batch)
+        enc = enc_pos = None
+        if frames is not None:
+            enc = tfm.encode(params, cfg, frames)
+            enc_pos = jnp.arange(frames.shape[1], dtype=jnp.int32)
+        return tfm.forward(params, cfg, tokens, embeds=embeds, enc=enc,
+                           enc_pos=enc_pos, remat=remat,
+                           collect_hiddens=collect_hiddens)
+
+    def prefill(params, batch, *, max_len):
+        tokens, embeds, frames = _batch_parts(cfg, batch)
+        enc = enc_pos = None
+        if frames is not None:
+            enc = tfm.encode(params, cfg, frames)
+            enc_pos = jnp.arange(frames.shape[1], dtype=jnp.int32)
+        return tfm.prefill(params, cfg, tokens, embeds=embeds, enc=enc,
+                           enc_pos=enc_pos, max_len=max_len)
+
+    def decode_step(params, token, cur, cache, *, enc=None, ctx=None):
+        enc_pos = None
+        if enc is not None:
+            enc_pos = jnp.arange(enc.shape[1], dtype=jnp.int32)
+        return tfm.decode_step(params, cfg, token, cur, cache, ctx=ctx,
+                               enc=enc, enc_pos=enc_pos)
+
+    def init_cache(batch, max_len):
+        return tfm.init_cache(cfg, batch, max_len)
+
+    encode = (lambda params, frames: tfm.encode(params, cfg, frames)) \
+        if cfg.arch_kind == 'encdec' else None
+
+    return Model(cfg=cfg, init=init, forward=forward, prefill=prefill,
+                 decode_step=decode_step, init_cache=init_cache, encode=encode)
+
+
+def param_count(params) -> int:
+    return sum(x.size for x in jax.tree_util.tree_leaves(params))

@@ -1,0 +1,217 @@
+"""Recurrent blocks: RG-LRU (recurrentgemma/Griffin) and Mamba-2 SSD.
+
+Both are written TPU-natively: training/prefill uses chunked/associative
+scans (log-depth on the sequence axis, matmul-heavy inner terms for the
+MXU); decode carries O(1) state — which is why these archs run the
+``long_500k`` cell natively.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import (causal_conv1d, conv1d_step, dense, he_init,
+                                 init_conv1d, init_dense, rms_norm)
+
+# ============================================================== RG-LRU (Griffin)
+
+_RGLRU_C = 8.0
+
+
+def init_rglru(key, cfg, dtype=jnp.float32):
+    d, w = cfg.d_model, cfg.rglru_width
+    ks = jax.random.split(key, 6)
+    return {
+        'wgate': init_dense(ks[0], d, w, dtype=dtype),
+        'wx': init_dense(ks[1], d, w, dtype=dtype),
+        'conv': init_conv1d(ks[2], w, cfg.rglru_conv, dtype),
+        'w_r': init_dense(ks[3], w, w, dtype=dtype),
+        'w_i': init_dense(ks[4], w, w, dtype=dtype),
+        'lam': jnp.full((w,), 2.0, dtype),      # softplus(2) ~ healthy decay
+        'wo': init_dense(ks[5], w, d, dtype=dtype),
+    }
+
+
+def _rglru_gates(p, u, quant):
+    r = jax.nn.sigmoid(dense(p['w_r'], u, quant=quant).astype(jnp.float32))
+    i = jax.nn.sigmoid(dense(p['w_i'], u, quant=quant).astype(jnp.float32))
+    log_a = -_RGLRU_C * jax.nn.softplus(p['lam'].astype(jnp.float32)) * r
+    a = jnp.exp(log_a)
+    mult = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+    b = mult * i * u.astype(jnp.float32)
+    return a, b
+
+
+def rglru_forward(p, x, cfg, *, quant=(0, 0)):
+    """x: (B,S,D) -> (B,S,D). Linear recurrence via associative scan."""
+    gate = jax.nn.gelu(dense(p['wgate'], x, quant=quant))
+    u = causal_conv1d(p['conv'], dense(p['wx'], x, quant=quant))
+    a, b = _rglru_gates(p, u, quant)
+
+    def combine(l, r):
+        (al, bl), (ar, br) = l, r
+        return al * ar, ar * bl + br
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    h = h.astype(x.dtype)
+    return dense(p['wo'], h * gate, quant=quant)
+
+
+def rglru_decode(p, x, cache, cfg, *, quant=(0, 0)):
+    """x: (B,D); cache = {'h': (B,W) fp32, 'conv': (B,k-1,W)}."""
+    gate = jax.nn.gelu(dense(p['wgate'], x, quant=quant))
+    u0 = dense(p['wx'], x, quant=quant)
+    u, conv_state = conv1d_step(p['conv'], u0, cache['conv'])
+    a, b = _rglru_gates(p, u, quant)
+    h = a * cache['h'] + b
+    out = dense(p['wo'], h.astype(x.dtype) * gate, quant=quant)
+    return out, {'h': h, 'conv': conv_state}
+
+
+def init_rglru_cache(cfg, batch, dtype):
+    w = cfg.rglru_width
+    return {'h': jnp.zeros((batch, w), jnp.float32),
+            'conv': jnp.zeros((batch, cfg.rglru_conv - 1, w), dtype)}
+
+
+# ================================================================= Mamba-2 (SSD)
+
+
+def init_mamba2(key, cfg, dtype=jnp.float32):
+    d = cfg.d_model
+    d_in = cfg.ssm_expand * d
+    n, hd = cfg.ssm_state, cfg.ssm_headdim
+    h = d_in // hd
+    ks = jax.random.split(key, 4)
+    conv_ch = d_in + 2 * n
+    return {
+        'in_proj': init_dense(ks[0], d, 2 * d_in + 2 * n + h, dtype=dtype),
+        'conv': init_conv1d(ks[1], conv_ch, cfg.ssm_conv, dtype),
+        'A_log': jnp.zeros((h,), jnp.float32),          # A = -exp(A_log) = -1
+        'D': jnp.ones((h,), jnp.float32),
+        'dt_bias': jnp.zeros((h,), jnp.float32),
+        'norm': {'scale': jnp.ones((d_in,), dtype)},
+        'out_proj': init_dense(ks[2], d_in, d, dtype=dtype),
+    }
+
+
+def _split_inproj(cfg, zxbcdt):
+    d_in = cfg.ssm_expand * cfg.d_model
+    n = cfg.ssm_state
+    h = d_in // cfg.ssm_headdim
+    z, xBC, dt = jnp.split(zxbcdt, [d_in, 2 * d_in + 2 * n], axis=-1)
+    return z, xBC, dt
+
+
+def ssd_chunked(x, a, B, C, chunk):
+    """Chunked SSD scan (state-space duality, mamba2 minimal formulation).
+
+    x: (b,l,h,p)  a: (b,l,h) log-decay per step  B,C: (b,l,n) (ngroups=1).
+    Returns y (b,l,h,p) and final state (b,h,p,n).
+    """
+    b, l, h, p = x.shape
+    n = B.shape[-1]
+    L = min(chunk, l)
+    assert l % L == 0, f'seq {l} not divisible by ssm chunk {L}'
+    c = l // L
+    xr = x.reshape(b, c, L, h, p)
+    ar = a.reshape(b, c, L, h)
+    Br = B.reshape(b, c, L, n)
+    Cr = C.reshape(b, c, L, n)
+
+    a_cs = jnp.cumsum(ar, axis=2)                                # (b,c,L,h)
+    # --- intra-chunk (quadratic in L, matmul-shaped for the MXU)
+    seg = a_cs[:, :, :, None, :] - a_cs[:, :, None, :, :]        # (b,c,L,S,h)
+    causal = jnp.tril(jnp.ones((L, L), bool))
+    att = jnp.where(causal[None, None, :, :, None], jnp.exp(seg), 0.0)
+    cb = jnp.einsum('bcln,bcsn->bcls', Cr, Br)                   # (b,c,L,S)
+    y_diag = jnp.einsum('bcls,bclsh,bcshp->bclhp', cb, att, xr.astype(jnp.float32))
+
+    # --- per-chunk end states
+    decay_states = jnp.exp(a_cs[:, :, -1:, :] - a_cs)            # (b,c,L,h)
+    states = jnp.einsum('bcln,bclh,bclhp->bchpn', Br, decay_states,
+                        xr.astype(jnp.float32))
+
+    # --- inter-chunk linear recurrence over c (associative scan)
+    a_tot = jnp.exp(a_cs[:, :, -1, :])                           # (b,c,h)
+
+    def combine(lhs, rhs):
+        (al, sl), (ar_, sr) = lhs, rhs
+        return al * ar_, ar_[..., None, None] * sl + sr
+
+    a_run, s_run = jax.lax.associative_scan(combine, (a_tot, states), axis=1)
+    # state entering chunk i = state after chunk i-1
+    s_prev = jnp.concatenate(
+        [jnp.zeros_like(s_run[:, :1]), s_run[:, :-1]], axis=1)   # (b,c,h,p,n)
+
+    y_off = jnp.einsum('bcln,bchpn,bclh->bclhp', Cr, s_prev,
+                       jnp.exp(a_cs))
+    y = (y_diag + y_off).reshape(b, l, h, p).astype(x.dtype)
+    return y, s_run[:, -1]
+
+
+def mamba2_forward(p, x, cfg, *, quant=(0, 0), return_state=False):
+    """x: (B,S,D) -> (B,S,D)."""
+    Bsz, S, D = x.shape
+    d_in = cfg.ssm_expand * D
+    n, hd = cfg.ssm_state, cfg.ssm_headdim
+    h = d_in // hd
+    z, xBC_raw, dt_raw = _split_inproj(cfg, dense(p['in_proj'], x, quant=quant))
+    xBC = jax.nn.silu(causal_conv1d(p['conv'], xBC_raw))
+    xs, B, C = jnp.split(xBC, [d_in, d_in + n], axis=-1)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p['dt_bias'])  # (B,S,h)
+    A = -jnp.exp(p['A_log'])
+    a = dt * A                                                    # log decay
+    xh = xs.reshape(Bsz, S, h, hd)
+    xd = xh * dt[..., None].astype(xs.dtype)
+    L = min(cfg.ssm_chunk, S)
+    pad = (-S) % L
+    if pad:
+        # zero-pad: a=0 (decay 1) and x/B/C=0 leave y[:S] and the final
+        # state exactly unchanged.
+        xd = jnp.pad(xd, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        a = jnp.pad(a, ((0, 0), (0, pad), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0)))
+    y, state = ssd_chunked(xd, a, B, C, cfg.ssm_chunk)
+    y = y[:, :S]
+    y = y + p['D'].astype(y.dtype)[None, None, :, None] * xh
+    y = y.reshape(Bsz, S, d_in)
+    y = rms_norm(p['norm'], y * jax.nn.silu(z), cfg.norm_eps)
+    out = dense(p['out_proj'], y, quant=quant)
+    if return_state:
+        # conv tail so decode can continue seamlessly after prefill
+        conv_tail = xBC_raw[:, -(cfg.ssm_conv - 1):, :]
+        return out, (state, conv_tail)
+    return out
+
+
+def mamba2_decode(p, x, cache, cfg, *, quant=(0, 0)):
+    """x: (B,D); cache = {'h': (B,h,p,n) fp32, 'conv': (B,k-1,conv_ch)}."""
+    Bsz, D = x.shape
+    d_in = cfg.ssm_expand * D
+    n, hd = cfg.ssm_state, cfg.ssm_headdim
+    h = d_in // hd
+    z, xBC0, dt_raw = _split_inproj(cfg, dense(p['in_proj'], x, quant=quant))
+    xBC, conv_state = conv1d_step(p['conv'], xBC0, cache['conv'])
+    xBC = jax.nn.silu(xBC)
+    xs, B, C = jnp.split(xBC, [d_in, d_in + n], axis=-1)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p['dt_bias'])  # (B,h)
+    A = -jnp.exp(p['A_log'])
+    xh = xs.reshape(Bsz, h, hd).astype(jnp.float32)
+    hst = cache['h'] * jnp.exp(dt * A)[..., None, None] \
+        + jnp.einsum('bh,bhp,bn->bhpn', dt, xh, B.astype(jnp.float32))
+    y = jnp.einsum('bn,bhpn->bhp', C.astype(jnp.float32), hst)
+    y = y + p['D'][None, :, None] * xh
+    y = y.reshape(Bsz, d_in).astype(x.dtype)
+    y = rms_norm(p['norm'], y * jax.nn.silu(z), cfg.norm_eps)
+    out = dense(p['out_proj'], y, quant=quant)
+    return out, {'h': hst, 'conv': conv_state}
+
+
+def init_mamba2_cache(cfg, batch, dtype):
+    d_in = cfg.ssm_expand * cfg.d_model
+    n = cfg.ssm_state
+    h = d_in // cfg.ssm_headdim
+    return {'h': jnp.zeros((batch, h, cfg.ssm_headdim, n), jnp.float32),
+            'conv': jnp.zeros((batch, cfg.ssm_conv - 1, d_in + 2 * n), dtype)}

@@ -1,0 +1,3 @@
+from repro.optim.adamw import (adamw, apply_updates, cosine_schedule,
+                               clip_by_global_norm)  # noqa: F401
+from repro.optim.compression import int8_compress_grads  # noqa: F401

@@ -1,0 +1,3 @@
+from repro.runtime.ft import FaultTolerantLoop, SimulatedFailure  # noqa: F401
+from repro.runtime.elastic import reshard_tree, elastic_restore  # noqa: F401
+from repro.runtime.straggler import StragglerMonitor  # noqa: F401

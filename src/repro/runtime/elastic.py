@@ -1,0 +1,37 @@
+"""Elastic scaling: reshard a training state onto a different mesh.
+
+When a pod (or any slice) is lost, the job restarts on the surviving
+hardware: the checkpoint is loaded as host arrays and re-placed under the
+*new* mesh's shardings.  Symmetrically, scale-up re-places onto a larger
+mesh.  Batch-size semantics are preserved by keeping the *global* batch
+fixed and letting the per-device batch grow/shrink (the step function is
+compiled against global shapes, so only shardings change, not math).
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding
+
+
+def reshard_tree(tree, shardings):
+    """device_put every leaf onto the matching sharding (host round-trip ok)."""
+    def place(x, s):
+        if isinstance(x, jax.Array) and not isinstance(s, NamedSharding):
+            return x
+        return jax.device_put(np.asarray(x), s)
+    return jax.tree.map(place, tree, shardings)
+
+
+def shardings_for(tree, mesh, spec_fn):
+    """Build a sharding pytree: spec_fn(path, leaf) -> PartitionSpec."""
+    def one(path, leaf):
+        return NamedSharding(mesh, spec_fn(path, leaf))
+    return jax.tree_util.tree_map_with_path(one, tree)
+
+
+def elastic_restore(ckpt_manager, tree_like, new_mesh, spec_fn):
+    """Restore the latest checkpoint onto a (possibly different-size) mesh."""
+    state, step = ckpt_manager.restore_latest(tree_like)
+    shardings = shardings_for(state, new_mesh, spec_fn)
+    return reshard_tree(state, shardings), step

@@ -1,0 +1,7 @@
+import os
+import sys
+
+# Tests run single-device (the dry-run, and only the dry-run, forces 512
+# host devices).  Keep XLA quiet and deterministic.
+os.environ.setdefault('JAX_PLATFORMS', 'cpu')
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), '..', 'src'))

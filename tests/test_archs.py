@@ -1,0 +1,122 @@
+"""Per-architecture smoke tests: reduced config, one forward + one train
+step on CPU, asserting shapes and finiteness; plus prefill->decode
+consistency against the full forward (the strongest cheap invariant of the
+serving path)."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ARCH_NAMES, get_config, get_smoke_config
+from repro.models import build_model
+from repro.optim import adamw, apply_updates
+
+
+def make_batch(cfg, B=2, S=32, key=0):
+    k = jax.random.key(key)
+    batch = {'tokens': jax.random.randint(k, (B, S), 0, cfg.vocab_size)}
+    if cfg.arch_kind == 'vlm':
+        batch['patches'] = 0.02 * jax.random.normal(
+            k, (B, cfg.frontend_tokens, cfg.d_model))
+    if cfg.arch_kind == 'encdec':
+        batch['frames'] = 0.02 * jax.random.normal(
+            k, (B, cfg.frontend_tokens, cfg.d_model))
+    batch['labels'] = jax.random.randint(jax.random.fold_in(k, 1),
+                                         (B, S), 0, cfg.vocab_size)
+    return batch
+
+
+@pytest.mark.parametrize('arch', ARCH_NAMES)
+def test_forward_shapes_finite(arch):
+    cfg = get_smoke_config(arch)
+    m = build_model(cfg)
+    params = m.init(jax.random.key(0))
+    B, S = 2, 32
+    batch = make_batch(cfg, B, S)
+    logits = m.forward(params, batch)
+    n_front = cfg.frontend_tokens if cfg.arch_kind == 'vlm' else 0
+    assert logits.shape == (B, S + n_front, cfg.vocab_size)
+    assert bool(jnp.isfinite(logits).all())
+
+
+@pytest.mark.parametrize('arch', ARCH_NAMES)
+def test_train_step_improves_nothing_breaks(arch):
+    cfg = get_smoke_config(arch)
+    m = build_model(cfg)
+    params = m.init(jax.random.key(0))
+    opt = adamw(1e-3)
+    opt_state = opt.init(params)
+    batch = make_batch(cfg)
+
+    @jax.jit
+    def step(params, opt_state):
+        def loss_fn(p):
+            lg = m.forward(p, batch)
+            lg = lg[:, -batch['labels'].shape[1]:]
+            lp = jax.nn.log_softmax(lg.astype(jnp.float32))
+            return -jnp.mean(jnp.take_along_axis(
+                lp, batch['labels'][..., None], -1))
+        l, g = jax.value_and_grad(loss_fn)(params)
+        up, opt_state = opt.update(g, opt_state, params)
+        return apply_updates(params, up), opt_state, l
+
+    l0 = None
+    for _ in range(3):
+        params, opt_state, l = step(params, opt_state)
+        assert bool(jnp.isfinite(l)), arch
+        l0 = l0 if l0 is not None else float(l)
+    assert float(l) < l0 + 1e-3, f'{arch}: loss exploded {l0}->{float(l)}'
+
+
+@pytest.mark.parametrize('arch', ARCH_NAMES)
+def test_prefill_decode_consistency(arch):
+    cfg = get_smoke_config(arch)
+    m = build_model(cfg)
+    params = m.init(jax.random.key(0))
+    B, S = 2, 32
+    batch = make_batch(cfg, B, S)
+    _, cache = m.prefill(params, batch, max_len=64)
+    tok = jnp.full((B,), 7, jnp.int32)
+    enc = m.encode(params, batch['frames']) if cfg.arch_kind == 'encdec' \
+        else None
+    n_front = cfg.frontend_tokens if cfg.arch_kind == 'vlm' else 0
+    lg_dec, _ = m.decode_step(params, tok, jnp.asarray(S + n_front,
+                                                       jnp.int32),
+                              cache, enc=enc)
+    batch2 = dict(batch,
+                  tokens=jnp.concatenate([batch['tokens'], tok[:, None]], 1))
+    lg_full = m.forward(params, batch2)[:, -1]
+    err = float(jnp.max(jnp.abs(lg_dec - lg_full)))
+    # MoE capacity dropping is batch-context dependent -> looser tolerance
+    tol = 1.5 if cfg.is_moe else 1e-4
+    assert err < tol, f'{arch}: decode diverges from forward by {err}'
+
+
+def test_full_configs_match_assignment():
+    """Pin the published numbers so a refactor can't drift them."""
+    c = get_config('qwen2-72b')
+    assert (c.num_layers, c.d_model, c.num_heads, c.num_kv_heads,
+            c.d_ff, c.vocab_size) == (80, 8192, 64, 8, 29568, 152064)
+    assert c.qkv_bias
+    c = get_config('deepseek-v3-671b')
+    assert (c.num_layers, c.d_model, c.num_heads, c.n_experts, c.top_k,
+            c.moe_d_ff, c.vocab_size) == (61, 7168, 128, 256, 8, 2048,
+                                          129280)
+    assert c.use_mla and c.n_shared_experts == 1
+    c = get_config('mamba2-2.7b')
+    assert (c.num_layers, c.d_model, c.ssm_state, c.vocab_size) == \
+        (64, 2560, 128, 50280)
+    c = get_config('gemma2-9b')
+    assert (c.num_layers, c.d_model, c.logit_softcap) == (42, 3584, 30.0)
+    assert c.block_pattern == ('local', 'global')
+    c = get_config('gemma3-12b')
+    assert c.block_pattern.count('local') == 5
+    c = get_config('recurrentgemma-9b')
+    assert c.block_pattern == ('recurrent', 'recurrent', 'local')
+    c = get_config('mixtral-8x7b')
+    assert (c.n_experts, c.top_k, c.window) == (8, 2, 4096)
+    c = get_config('whisper-small')
+    assert c.arch_kind == 'encdec' and not c.shard_heads
+    c = get_config('internvl2-2b')
+    assert c.arch_kind == 'vlm' and c.vocab_size == 92553
+    c = get_config('tinyllama-1.1b')
+    assert (c.num_layers, c.num_kv_heads) == (22, 4)

@@ -1,0 +1,159 @@
+"""Compression-chain system tests: passes transform state coherently,
+BitOps accounting is monotone, planner reproduces the paper's sequence."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.cnn import RESNET8_CIFAR, VGG8_CIFAR, MOBILENET_SMALL_CIFAR
+from repro.core import bitops as bo
+from repro.core.chain import OPTIMAL_SEQUENCE, run_chain
+from repro.core.family import CNNFamily, LMFamily
+from repro.core.passes import PASSES, Trainer, init_chain_state
+from repro.core.planner import OrderPlanner, pareto_frontier, theoretical_order
+from repro.data import SyntheticImages, SyntheticTokens
+
+FAST = Trainer(batch=32, steps=8, lr=2e-3, eval_n=1, eval_batch=64)
+
+
+@pytest.fixture(scope='module')
+def cnn_family():
+    return CNNFamily(SyntheticImages(difficulty=0.6), image=32)
+
+
+@pytest.fixture(scope='module')
+def base_state(cnn_family):
+    return init_chain_state(cnn_family, RESNET8_CIFAR, jax.random.key(0),
+                            FAST)
+
+
+def test_theoretical_order_is_dpqe():
+    assert theoretical_order() == 'DPQE'
+    assert OPTIMAL_SEQUENCE == 'DPQE'
+
+
+def test_planner_topological_sort_unique():
+    pl = OrderPlanner('DPQE')
+    # the paper's six pairwise outcomes
+    for a, b in [('D', 'P'), ('D', 'Q'), ('D', 'E'), ('P', 'Q'),
+                 ('P', 'E'), ('Q', 'E')]:
+        pl.add_pairwise(a, b, 'AB')
+    assert pl.topological_order() == 'DPQE'
+
+
+def test_planner_detects_cycle():
+    pl = OrderPlanner('DPQ')
+    pl.add_pairwise('D', 'P', 'AB')
+    pl.add_pairwise('P', 'Q', 'AB')
+    pl.add_pairwise('D', 'Q', 'BA')         # Q before D: cycle
+    with pytest.raises(ValueError):
+        pl.topological_order()
+
+
+def test_pareto_frontier():
+    pts = [(0.9, 10), (0.8, 100), (0.85, 50), (0.7, 50), (0.95, 5)]
+    front = pareto_frontier(pts)
+    assert (0.7, 50) not in front           # dominated by (0.85, 50)
+    assert (0.8, 100) in front and (0.95, 5) in front
+
+
+def test_full_chain_dpqe(cnn_family, base_state):
+    st = run_chain(cnn_family, None, 'DPQE',
+                   {'D': {'factor': 0.5}, 'P': {'ratio': 0.3},
+                    'Q': {'w_bits': 4, 'a_bits': 8},
+                    'E': {'threshold': 0.8}},
+                   FAST, state=base_state)
+    labels = [h['pass'] for h in st.history]
+    assert labels == ['baseline', 'D', 'P', 'Q', 'E']
+    crs = [h['BitOpsCR'] for h in st.history]
+    assert crs[0] == 1.0
+    # monotone up to the exit-head overhead (E adds head MACs; with low
+    # exit rates at toy scale the expected cost can tick up ~2%)
+    assert all(b >= a * 0.97 for a, b in zip(crs, crs[1:])), \
+        f'BitOpsCR must be ~monotone along the chain: {crs}'
+    assert crs[-1] > 10, 'D+P+Q should compress BitOps >10x even at toy scale'
+    assert st.cfg.w_bits == 4 and st.cfg.a_bits == 8
+    assert st.exit_probs is not None
+
+
+@pytest.mark.parametrize('cfg', [VGG8_CIFAR, MOBILENET_SMALL_CIFAR])
+def test_prune_physically_shrinks(cnn_family, cfg):
+    params = cnn_family.init(jax.random.key(1), cfg)
+    n0 = sum(x.size for x in jax.tree_util.tree_leaves(params))
+    pruned, cfg2 = cnn_family.prune(params, cfg, 0.5)
+    n1 = sum(x.size for x in jax.tree_util.tree_leaves(pruned))
+    assert n1 < n0 * 0.85
+    # pruned model still runs
+    x = jax.random.normal(jax.random.key(2), (2, 32, 32, 3))
+    lg = cnn_family.logits(pruned, cfg2, x)
+    assert lg.shape == (2, 10) and bool(jnp.isfinite(lg).all())
+
+
+def test_quant_pass_sets_bits_and_keeps_finite(cnn_family, base_state):
+    st = PASSES['Q'].apply(base_state, {'w_bits': 2, 'a_bits': 4}, FAST)
+    assert st.cfg.w_bits == 2 and st.cfg.a_bits == 4
+    x = jax.random.normal(jax.random.key(3), (2, 32, 32, 3))
+    assert bool(jnp.isfinite(cnn_family.logits(st.params, st.cfg, x)).all())
+
+
+def test_exit_pass_produces_probs(cnn_family, base_state):
+    st = PASSES['E'].apply(base_state, {'threshold': 0.5}, FAST)
+    assert st.exit_probs and all(0 <= p <= 1 for p in st.exit_probs.values())
+    assert st.dyn_accuracy is not None
+
+
+# ----------------------------------------------------------- LM-side chain
+
+
+def test_lm_chain_passes():
+    from repro.configs import get_smoke_config
+    cfg = get_smoke_config('tinyllama-1.1b', layers=4).replace(
+        vocab_size=128)
+    fam = LMFamily(SyntheticTokens(vocab=cfg.vocab_size), seq=32)
+    tr = Trainer(batch=8, steps=6, lr=2e-3, eval_n=1, eval_batch=16)
+    st = init_chain_state(fam, cfg, jax.random.key(0), tr)
+    st = run_chain(fam, None, 'PQ',
+                   {'P': {'ratio': 0.25}, 'Q': {'w_bits': 8, 'a_bits': 8}},
+                   tr, state=st)
+    assert st.cfg.d_ff < cfg.d_ff                  # physically pruned
+    assert st.cfg.w_bits == 8
+    assert st.history[-1]['BitOpsCR'] > 1.0
+
+
+def test_lm_expert_pruning():
+    from repro.configs import get_smoke_config
+    cfg = get_smoke_config('mixtral-8x7b').replace(vocab_size=128)
+    fam = LMFamily(SyntheticTokens(vocab=128), seq=16)
+    params = fam.init(jax.random.key(0), cfg)
+    pruned, cfg2 = fam.prune(params, cfg, 0.5)
+    assert cfg2.n_experts == 2
+    batch = fam.train_batch(jax.random.key(1), 2)
+    lg = fam.logits_of(pruned, cfg2, batch)
+    assert bool(jnp.isfinite(lg).all())
+
+
+# ------------------------------------------------------------------ bitops
+
+
+def test_bitops_quant_scaling():
+    cfg = RESNET8_CIFAR
+    full = bo.cnn_bitops(cfg)
+    q8 = bo.cnn_bitops(cfg.replace(w_bits=8, a_bits=8))
+    assert abs(full / q8 - (32 * 32) / (8 * 8)) < 1e-6
+
+
+def test_bitops_early_exit_reduces_cost():
+    cfg = RESNET8_CIFAR.replace(exit_stages=(0, 1))
+    full = bo.cnn_bitops(cfg)
+    dyn = bo.cnn_bitops(cfg, exit_probs={0: 0.5, 1: 0.5})
+    assert dyn < full
+
+
+def test_lm_bitops_moe_counts_active_only():
+    from repro.configs import get_config
+    cfg = get_config('mixtral-8x7b')
+    moe = bo.lm_bitops(cfg, 128)
+    dense_equiv = bo.lm_bitops(cfg.replace(n_experts=0, top_k=0,
+                                           d_ff=cfg.moe_d_ff), 128)
+    # top-2 of 8 experts ~ 2x a dense MLP of the same expert size, not 8x
+    assert moe < dense_equiv * 2.6

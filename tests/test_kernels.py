@@ -1,0 +1,156 @@
+"""Pallas kernel validation: shape/dtype sweeps against pure-jnp oracles
+(interpret mode on CPU), plus hypothesis property tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+from repro.kernels.decode_attention import decode_attention
+from repro.kernels.fake_quant import fake_quant
+from repro.kernels.quant_matmul import quant_matmul
+
+
+# ------------------------------------------------------------- quant_matmul
+
+
+@pytest.mark.parametrize('M,K,N', [(128, 256, 128), (256, 512, 384),
+                                   (64, 128, 256), (128, 1024, 512),
+                                   (32, 96, 160)])
+@pytest.mark.parametrize('out_dtype', [jnp.float32, jnp.bfloat16])
+def test_quant_matmul_sweep(M, K, N, out_dtype):
+    k = jax.random.key(M * 7 + N)
+    xq = jax.random.randint(k, (M, K), -128, 128, jnp.int8)
+    wq = jax.random.randint(jax.random.fold_in(k, 1), (K, N), -128, 128,
+                            jnp.int8)
+    sx = jax.random.uniform(jax.random.fold_in(k, 2), (M,), jnp.float32,
+                            1e-3, 1e-2)
+    sw = jax.random.uniform(jax.random.fold_in(k, 3), (N,), jnp.float32,
+                            1e-3, 1e-2)
+    out = quant_matmul(xq, wq, sx, sw, out_dtype=out_dtype, interpret=True)
+    expect = ref.quant_matmul_ref(xq, wq, sx, sw, out_dtype)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(expect, np.float32),
+                               rtol=1e-2, atol=1e-4)
+
+
+@pytest.mark.parametrize('bm,bn,bk', [(64, 64, 64), (128, 128, 128),
+                                      (32, 128, 256)])
+def test_quant_matmul_block_shapes(bm, bn, bk):
+    k = jax.random.key(0)
+    xq = jax.random.randint(k, (128, 256), -128, 128, jnp.int8)
+    wq = jax.random.randint(jax.random.fold_in(k, 1), (256, 128), -128, 128,
+                            jnp.int8)
+    sx = jnp.full((128,), 0.01)
+    sw = jnp.full((128,), 0.02)
+    out = quant_matmul(xq, wq, sx, sw, bm=bm, bn=bn, bk=bk, interpret=True)
+    expect = ref.quant_matmul_ref(xq, wq, sx, sw)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                               rtol=1e-4)
+
+
+# --------------------------------------------------------------- fake_quant
+
+
+@pytest.mark.parametrize('K,N', [(128, 128), (512, 384), (96, 640),
+                                 (2048, 256)])
+@pytest.mark.parametrize('bits', [8, 4, 2])
+def test_fake_quant_sweep(K, N, bits):
+    w = jax.random.normal(jax.random.key(K + bits), (K, N))
+    out = fake_quant(w, bits=bits, interpret=True)
+    expect = ref.fake_quant_ref(w, bits)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                               rtol=1e-5, atol=1e-6)
+
+
+@settings(max_examples=20, deadline=None)
+@given(bits=st.integers(2, 8), seed=st.integers(0, 2**31 - 1))
+def test_fake_quant_properties(bits, seed):
+    """Idempotence + bounded error + level count <= 2^bits."""
+    w = jax.random.normal(jax.random.key(seed), (64, 64))
+    q1 = ref.fake_quant_ref(w, bits)
+    q2 = ref.fake_quant_ref(q1, bits)
+    np.testing.assert_allclose(np.asarray(q1), np.asarray(q2),
+                               rtol=1e-5, atol=1e-6)     # idempotent
+    qmax = 2.0 ** (bits - 1) - 1
+    scale = np.abs(np.asarray(w)).max(0) / qmax
+    err = np.abs(np.asarray(q1 - w))
+    assert (err <= 0.5 * scale[None, :] + 1e-6).all()    # half-step bound
+    for col in range(0, 64, 16):
+        levels = np.unique(np.asarray(q1[:, col]))
+        assert len(levels) <= 2 ** bits
+
+
+# --------------------------------------------------------- decode attention
+
+
+@pytest.mark.parametrize('B,H,K,D,S', [(2, 8, 4, 64, 512), (1, 4, 4, 128, 256),
+                                       (2, 16, 2, 64, 1024), (4, 8, 8, 128, 384)])
+def test_decode_attention_sweep(B, H, K, D, S):
+    k = jax.random.key(B * 31 + S)
+    q = jax.random.normal(k, (B, H, D))
+    kk = jax.random.normal(jax.random.fold_in(k, 1), (B, S, K, D))
+    vv = jax.random.normal(jax.random.fold_in(k, 2), (B, S, K, D))
+    valid = jnp.arange(S) < (S * 3 // 4)
+    out = decode_attention(q, kk, vv, valid, s_blk=128, interpret=True)
+    expect = ref.decode_attention_ref(q, kk, vv,
+                                      jnp.broadcast_to(valid, (B, S)))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                               rtol=1e-4, atol=1e-5)
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1),
+       frac=st.floats(0.1, 1.0))
+def test_decode_attention_mask_property(seed, frac):
+    """Output must equal attention computed only over the valid prefix."""
+    B, H, K, D, S = 1, 4, 2, 32, 256
+    k = jax.random.key(seed)
+    q = jax.random.normal(k, (B, H, D))
+    kk = jax.random.normal(jax.random.fold_in(k, 1), (B, S, K, D))
+    vv = jax.random.normal(jax.random.fold_in(k, 2), (B, S, K, D))
+    n = max(1, int(S * frac))
+    valid = jnp.arange(S) < n
+    out = decode_attention(q, kk, vv, valid, s_blk=64, interpret=True)
+    trunc = ref.decode_attention_ref(q, kk[:, :n], vv[:, :n],
+                                     jnp.ones((B, n), bool))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(trunc),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_int8_dense_serving_accuracy():
+    """End-to-end int8 serving path stays within ~1.5% of fp32."""
+    k = jax.random.key(0)
+    x = jax.random.normal(k, (64, 512))
+    w = jax.random.normal(jax.random.fold_in(k, 1), (512, 256)) * 0.05
+    y = ops.quantize_dense_int8(x, w)
+    y_ref = x @ w
+    rel = float(jnp.max(jnp.abs(y - y_ref)) / jnp.max(jnp.abs(y_ref)))
+    assert rel < 0.015, rel
+
+
+# ------------------------------------------------ int8-KV flash decode
+
+
+@pytest.mark.parametrize('B,H,K,D,S', [(2, 8, 4, 64, 512),
+                                       (1, 16, 8, 128, 256)])
+def test_decode_attention_int8_kv(B, H, K, D, S):
+    """int8-KV kernel == bf16 oracle run on the dequantized cache."""
+    from repro.kernels.decode_attention import decode_attention_int8
+    from repro.models.attention import kv_quantize, kv_dequantize
+    k = jax.random.key(B * 13 + S)
+    q = jax.random.normal(k, (B, H, D))
+    kk = jax.random.normal(jax.random.fold_in(k, 1), (B, S, K, D))
+    vv = jax.random.normal(jax.random.fold_in(k, 2), (B, S, K, D))
+    kq, ks = kv_quantize(kk)
+    vq, vs = kv_quantize(vv)
+    valid = jnp.arange(S) < (S - 37)
+    out = decode_attention_int8(q, kq, vq, ks, vs, valid, s_blk=128,
+                                interpret=True)
+    expect = ref.decode_attention_ref(
+        q, kv_dequantize(kq, ks, jnp.float32),
+        kv_dequantize(vq, vs, jnp.float32),
+        jnp.broadcast_to(valid, (B, S)))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                               rtol=1e-4, atol=1e-5)

@@ -1,0 +1,142 @@
+"""Property-based tests on model-substrate invariants (hypothesis)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.models import attention as attn
+from repro.models import recurrent as rec
+from repro.models.layers import causal_conv1d, conv1d_step, init_conv1d
+
+
+@settings(max_examples=12, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), S=st.integers(3, 48),
+       chunk=st.sampled_from([4, 8, 16, 64]))
+def test_chunked_attention_matches_dense(seed, S, chunk):
+    """Online-softmax chunked attention == dense softmax attention for any
+    chunk size (the flash invariant)."""
+    B, H, K, D = 2, 4, 2, 16
+    k = jax.random.key(seed)
+    q = jax.random.normal(k, (B, S, H, D))
+    kk = jax.random.normal(jax.random.fold_in(k, 1), (B, S, K, D))
+    vv = jax.random.normal(jax.random.fold_in(k, 2), (B, S, K, D))
+    pos = jnp.arange(S, dtype=jnp.int32)
+    out = attn.chunked_attention(q, kk, vv, pos, pos, chunk=chunk)
+    # dense oracle
+    g = H // K
+    qg = q.reshape(B, S, K, g, D) * D ** -0.5
+    logits = jnp.einsum('bskgd,btkd->bskgt', qg, kk)
+    mask = pos[None, :] <= pos[:, None]
+    logits = jnp.where(mask[None, :, None, None, :], logits, -1e30)
+    p = jax.nn.softmax(logits, axis=-1)
+    expect = jnp.einsum('bskgt,btkd->bskgd', p, vv).reshape(B, S, H, D)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                               rtol=2e-4, atol=2e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), window=st.integers(1, 16))
+def test_local_attention_respects_window(seed, window):
+    """A token must not attend outside its sliding window: outputs equal
+    attention over explicitly truncated keys."""
+    B, H, K, D, S = 1, 2, 2, 8, 24
+    k = jax.random.key(seed)
+    q = jax.random.normal(k, (B, S, H, D))
+    kk = jax.random.normal(jax.random.fold_in(k, 1), (B, S, K, D))
+    vv = jax.random.normal(jax.random.fold_in(k, 2), (B, S, K, D))
+    pos = jnp.arange(S, dtype=jnp.int32)
+    out = attn.chunked_attention(q, kk, vv, pos, pos, window=window, chunk=8)
+    i = S - 1
+    lo = max(0, i - window + 1)
+    out_last = attn.chunked_attention(q[:, i:i + 1], kk[:, lo:i + 1],
+                                      vv[:, lo:i + 1], pos[i:i + 1],
+                                      pos[lo:i + 1], chunk=8)
+    np.testing.assert_allclose(np.asarray(out[:, i]),
+                               np.asarray(out_last[:, 0]),
+                               rtol=2e-4, atol=2e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1),
+       chunk=st.sampled_from([2, 4, 8, 32]))
+def test_ssd_chunk_invariance(seed, chunk):
+    """Mamba-2 SSD output must not depend on the chunk size (the state-space
+    duality identity)."""
+    b, l, h, p, n = 1, 32, 4, 8, 16
+    k = jax.random.key(seed)
+    x = jax.random.normal(k, (b, l, h, p))
+    a = -jnp.abs(jax.random.normal(jax.random.fold_in(k, 1), (b, l, h))) * 0.1
+    B = jax.random.normal(jax.random.fold_in(k, 2), (b, l, n))
+    C = jax.random.normal(jax.random.fold_in(k, 3), (b, l, n))
+    y1, s1 = rec.ssd_chunked(x, a, B, C, chunk)
+    y2, s2 = rec.ssd_chunked(x, a, B, C, l)         # single chunk
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2),
+                               rtol=2e-3, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2),
+                               rtol=2e-3, atol=2e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_ssd_matches_sequential_recurrence(seed):
+    """SSD chunked == naive per-step SSM recurrence."""
+    b, l, h, p, n = 1, 12, 2, 4, 8
+    k = jax.random.key(seed)
+    x = jax.random.normal(k, (b, l, h, p))
+    a = -jnp.abs(jax.random.normal(jax.random.fold_in(k, 1), (b, l, h))) * 0.2
+    B = jax.random.normal(jax.random.fold_in(k, 2), (b, l, n))
+    C = jax.random.normal(jax.random.fold_in(k, 3), (b, l, n))
+    y, state = rec.ssd_chunked(x, a, B, C, 4)
+    hst = np.zeros((b, h, p, n))
+    ys = []
+    for t in range(l):
+        hst = hst * np.exp(np.asarray(a[:, t]))[:, :, None, None] \
+            + np.einsum('bhp,bn->bhpn', np.asarray(x[:, t]),
+                        np.asarray(B[:, t]))
+        ys.append(np.einsum('bn,bhpn->bhp', np.asarray(C[:, t]), hst))
+    np.testing.assert_allclose(np.asarray(y), np.stack(ys, 1),
+                               rtol=1e-3, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(state), hst, rtol=1e-3, atol=1e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), S=st.integers(4, 24))
+def test_conv1d_step_matches_full(seed, S):
+    """Streaming conv (decode) == full causal conv at every position."""
+    C, kk = 6, 4
+    key = jax.random.key(seed)
+    p = init_conv1d(key, C, kk)
+    x = jax.random.normal(jax.random.fold_in(key, 1), (2, S, C))
+    full = causal_conv1d(p, x)
+    state = jnp.zeros((2, kk - 1, C))
+    for t in range(S):
+        y, state = conv1d_step(p, x[:, t], state)
+        np.testing.assert_allclose(np.asarray(y), np.asarray(full[:, t]),
+                                   rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), cur=st.integers(0, 30))
+def test_ring_buffer_cache_write(seed, cur):
+    """Decode cache ring write lands at slot cur % window and keeps the
+    newest positions."""
+    B, K, D, W = 1, 2, 8, 8
+    key = jax.random.key(seed)
+    cache = attn.init_attn_cache(
+        type('C', (), {'window': W, 'num_kv_heads': K, 'head_dim': D,
+                       'kv_cache_bits': 0})(),
+        B, 'local', 64, jnp.float32)
+    q = jax.random.normal(key, (B, 4, D))
+    nk = jax.random.normal(jax.random.fold_in(key, 1), (B, K, D))
+    nv = jax.random.normal(jax.random.fold_in(key, 2), (B, K, D))
+    out, new_cache = attn.decode_attn_reference(
+        q, nk, nv, cache, jnp.asarray(cur), window=W)
+    ck, pos = new_cache['k'], new_cache['meta']['pos']
+    slot = cur % W
+    np.testing.assert_allclose(np.asarray(ck[:, slot]), np.asarray(nk))
+    assert int(pos[slot]) == cur
+    # only the new token is valid -> attention output == v of the new token
+    g = 4 // K
+    np.testing.assert_allclose(np.asarray(out.reshape(B, K, g, D)),
+                               np.broadcast_to(np.asarray(nv)[:, :, None, :],
+                                               (B, K, g, D)), rtol=1e-5)
