@@ -1,0 +1,110 @@
+"""Serving benchmark: fake-quant fp32 forward vs the exported int8 path.
+
+The chain's Q pass is only *analytically* cheaper until export: the QAT
+forward runs fp32 convs and recomputes per-channel weight abs-max scales on
+every call.  This benchmark times, per CNN config:
+
+* ``fakequant_fp32`` — the QAT forward (per-call weight scale recompute)
+* ``exported_int8``  — core/export.py serving fn (static weight scales,
+  int8 conv/matmul; jnp int8 path on CPU, Pallas kernels on TPU)
+* ``exported_int8_early_exit`` — batched early-exit serving (resnet8)
+
+Results go to BENCH_serving.json at the repo root.
+
+    PYTHONPATH=src python benchmarks/serving_int8.py [--batch 64] [--pallas]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+
+
+def _time(fn, *args, warmup=2, iters=10):
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def main():
+    from repro.configs.cnn import (MOBILENET_SMALL_CIFAR, RESNET8_CIFAR,
+                                   VGG8_CIFAR)
+    from repro.core.export import export_cnn
+    from repro.core.family import CNNFamily
+    from repro.data import SyntheticImages
+    from repro.models.cnn import cnn_forward, init_cnn
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument('--batch', type=int, default=64)
+    ap.add_argument('--iters', type=int, default=10)
+    ap.add_argument('--pallas', action='store_true',
+                    help='force the Pallas kernels (interpret mode on CPU '
+                         '— correctness timing only, very slow)')
+    ap.add_argument('--out', default=os.path.join(
+        os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+        'BENCH_serving.json'))
+    args = ap.parse_args()
+
+    # Same auto-dispatch rule export_cnn applies for use_pallas=None, made
+    # explicit here so the recorded label always matches the timed path.
+    # On CPU the jnp reference path uses an int8 einsum for dense layers
+    # but dequantizes convs to fp32 lax.conv (no int8 conv units) — CPU
+    # "speedup" isolates the static-scale win, not int8 compute.
+    use_pallas = args.pallas or jax.default_backend() == 'tpu'
+    x = jax.random.normal(jax.random.key(0), (args.batch, 32, 32, 3))
+    fam = CNNFamily(SyntheticImages())
+    results = {'backend': jax.default_backend(),
+               'batch': args.batch,
+               'int8_path': 'pallas' if use_pallas else 'jnp-ref',
+               'configs': {}}
+
+    for base in (RESNET8_CIFAR, VGG8_CIFAR, MOBILENET_SMALL_CIFAR):
+        cfg = base.replace(w_bits=8, a_bits=8)
+        params = init_cnn(jax.random.key(0), cfg)
+        if base is RESNET8_CIFAR:      # early-exit serving entry
+            params, cfg = fam.add_exits(jax.random.key(1), params,
+                                        cfg.replace(exit_stages=()), (1,))
+            cfg = cfg.replace(w_bits=8, a_bits=8)
+
+        fake = jax.jit(lambda p, x, c=cfg: cnn_forward(p, c, x))
+        us_fake = _time(fake, params, x, iters=args.iters)
+
+        m = export_cnn(params, cfg, use_pallas=use_pallas)
+        us_int8 = _time(m.fn, m.params, x, iters=args.iters)
+
+        entry = {'fakequant_fp32_us': round(us_fake, 1),
+                 'exported_int8_us': round(us_int8, 1),
+                 'speedup': round(us_fake / us_int8, 3)}
+        if cfg.exit_stages:
+            from repro.core.export import early_exit_batch
+
+            @jax.jit
+            def ee(p, x):            # the full deployed early-exit path:
+                logits, exits = m.fn_exits(p, x)   # forward + exit heads
+                return early_exit_batch(logits, exits, 0.85)   # + selection
+
+            us_ee = _time(ee, m.params, x, iters=args.iters)
+            _, stage = ee(m.params, x)
+            entry['exported_int8_early_exit_us'] = round(us_ee, 1)
+            entry['exit_fraction'] = round(
+                float(jnp.mean(stage >= 0)), 3)
+        results['configs'][cfg.name] = entry
+        print(f'{cfg.name}: fakequant_fp32={us_fake:.1f}us '
+              f'exported_int8={us_int8:.1f}us '
+              f'speedup={us_fake / us_int8:.2f}x')
+
+    with open(args.out, 'w') as f:
+        json.dump(results, f, indent=1)
+    print(f'wrote {args.out}')
+
+
+if __name__ == '__main__':
+    main()

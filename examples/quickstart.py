@@ -1,6 +1,14 @@
 """Quickstart: build any assigned architecture, train a few steps, decode.
 
     PYTHONPATH=src python examples/quickstart.py --arch tinyllama-1.1b
+
+Serving the compressed model (--serve-cnn): after the D→P→Q→E chain, the
+export pass compiles the fake-quant params down to a genuinely-int8 serving
+function on the Pallas kernels — static per-channel weight scales snapshot
+once at export, convs on kernels/quant_conv.py, fcs on
+kernels/quant_matmul.py, early exits served batched:
+
+    PYTHONPATH=src python examples/quickstart.py --serve-cnn
 """
 import argparse
 
@@ -13,11 +21,39 @@ from repro.models import build_model
 from repro.optim import adamw, apply_updates
 
 
+def serve_cnn_demo():
+    """Serving the compressed model: QAT params → int8 export → batched
+    early-exit inference.  See core/export.py for the pass itself."""
+    from repro.configs.cnn import RESNET8_CIFAR
+    from repro.core.export import export_cnn
+    from repro.core.family import CNNFamily
+    from repro.data import SyntheticImages
+
+    fam = CNNFamily(SyntheticImages())
+    params = fam.init(jax.random.key(0), RESNET8_CIFAR)
+    params, cfg = fam.add_exits(jax.random.key(1), params, RESNET8_CIFAR,
+                                fam.default_exit_points(RESNET8_CIFAR))
+    cfg = cfg.replace(w_bits=8, a_bits=8)       # the chain's Q pass sets these
+
+    model = export_cnn(params, cfg)             # scales snapshot ONCE, here
+    x, _ = fam.eval_batches(1, 16)[0]
+    logits = model.serve(x)                     # int8 conv/matmul kernels
+    pred, stage = model.serve_early_exit(x, threshold=0.85)
+    print('int8 serving logits:', logits.shape,
+          'early-exit stages:', [int(s) for s in stage])
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument('--arch', default='tinyllama-1.1b', choices=ARCH_NAMES)
     ap.add_argument('--steps', type=int, default=20)
+    ap.add_argument('--serve-cnn', action='store_true',
+                    help='demo: export + serve an int8 compressed CNN')
     args = ap.parse_args()
+
+    if args.serve_cnn:
+        serve_cnn_demo()
+        return
 
     cfg = get_smoke_config(args.arch)           # reduced config: runs on CPU
     model = build_model(cfg)

@@ -1,0 +1,155 @@
+"""Export pass: compile a finished compression chain into an int8 serving
+function running on the Pallas kernels.
+
+The chain (D→P→Q→E, core/passes.py) ends with *fake-quant* params: every
+forward still runs fp32 convs/matmuls and recomputes per-channel weight
+abs-max scales per call.  This module realizes the Q pass at inference:
+
+1. **Snapshot scales once** — ``quantize_params_for_serving`` converts every
+   conv/fc weight to an int8 pytree with static per-out-channel scales
+   (weight abs-max is computed exactly once, at export).
+2. **Route to kernels** — the jit'd serving function replays the model
+   topology via ``cnn_forward``'s layer injection, sending convs through
+   the im2col int8 conv (kernels/quant_conv.py) and fcs through the int8
+   matmul (kernels/quant_matmul.py), both with fused dequant(+bias)
+   epilogues.  Only *activation* scales are computed per call (dynamic
+   activation quantization — one per-tensor abs-max per layer, matching the
+   QAT grid of core/quantization.fake_quant_act, so exported outputs track
+   the fake-quant oracle tightly).
+3. **Batched early exit** — the E pass's exit heads are served batched:
+   every sample takes its earliest confident exit (softmax confidence over
+   a threshold), vectorized with where-masks instead of per-sample control
+   flow.
+
+On CPU (``use_pallas=None`` → auto) the serving function runs the pure-jnp
+reference path: identical math and static scales, with dense layers on a
+real int8 einsum but convs dequantized to an fp32 ``lax.conv``
+(ref.quant_conv_ref) — CPU has no int8 conv units, so the CPU win is
+limited to eliminating the per-call weight-scale recompute.  The genuine
+int8 conv tiles are the TPU path (Mosaic-compiled Pallas kernels).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quantization import quantize_params_for_serving
+from repro.kernels import ops
+from repro.models import cnn as cnn_lib
+
+
+def _serving_bits(cfg) -> tuple[int, int]:
+    """(w_bits, a_bits) the int8 kernels run at: the chain's QAT bits when
+    they fit in int8, else 8 (fp32/no-QAT models serve as W8A8).  Weights
+    go down to bits=1 (DoReFa sign*mean, via quantize_weight); activation
+    quantization needs >= 2 bits for a nonzero qmax."""
+    w_bits = cfg.w_bits if 0 < cfg.w_bits <= 8 else 8
+    a_bits = cfg.a_bits if 1 < cfg.a_bits <= 8 else 8
+    return w_bits, a_bits
+
+
+def _serving_layers(use_pallas: bool, a_bits: int):
+    """Int8 layer implementations injected into cnn_forward.
+
+    Weight scales live in the params pytree (static); quant here is the
+    cfg hook tuple, ignored for weights — that is the QAT/serving split.
+    """
+    def conv_fn(p, x, *, stride=1, quant=(0, 0), groups=1):
+        del quant
+        return ops.quant_conv_nhwc(x, p['w_q'], p['scale'], p.get('b'),
+                                   stride=stride, groups=groups,
+                                   a_bits=a_bits, use_pallas=use_pallas)
+
+    def fc_fn(p, x, *, quant=(0, 0)):
+        del quant
+        y = ops.quant_dense(x, p['w_q'], p['scale'], a_bits=a_bits,
+                            per_row=False, use_pallas=use_pallas)
+        return y + p['b'] if 'b' in p else y
+
+    return conv_fn, fc_fn
+
+
+def early_exit_batch(logits, exits, threshold):
+    """Batched early-exit selection: (pred (B,), stage (B,) int32).
+
+    Each sample takes the earliest exit whose softmax confidence clears
+    ``threshold``; stage is -1 for samples that ran to the final head.
+    Pure jnp (no per-sample control flow) so it jits into the serving fn.
+    """
+    pred = jnp.argmax(logits, -1)
+    stage = jnp.full(pred.shape, -1, jnp.int32)
+    taken = jnp.zeros(pred.shape, bool)
+    for s in sorted(exits):
+        p = jax.nn.softmax(exits[s].astype(jnp.float32), axis=-1)
+        take = (p.max(-1) > threshold) & ~taken
+        pred = jnp.where(take, jnp.argmax(p, -1), pred)
+        stage = jnp.where(take, jnp.int32(s), stage)
+        taken |= take
+    return pred, stage
+
+
+@dataclass
+class ServingModel:
+    """A compiled int8 serving endpoint for a compressed model."""
+    cfg: Any
+    params: Any                # int8 pytree: {'w_q', 'scale'(, 'b')} leaves
+    fn: Callable               # jit'd (params, x) -> logits
+    fn_exits: Callable | None = None   # jit'd (params, x) -> (logits, exits)
+
+    def serve(self, x):
+        return self.fn(self.params, x)
+
+    def serve_early_exit(self, x, threshold=0.9):
+        """(pred, stage) per sample; requires exported exit heads."""
+        if self.fn_exits is None:
+            raise ValueError('model was exported without exit heads')
+        logits, exits = self.fn_exits(self.params, x)
+        return early_exit_batch(logits, exits, threshold)
+
+
+def export_cnn(params, cfg, *, use_pallas=None) -> ServingModel:
+    """Compile a (possibly chain-compressed) CNN to the int8 serving path."""
+    if use_pallas is None:
+        use_pallas = jax.default_backend() == 'tpu'   # kernels are Mosaic-only
+    w_bits, a_bits = _serving_bits(cfg)
+    qparams = quantize_params_for_serving(params, bits=w_bits)
+    conv_fn, fc_fn = _serving_layers(use_pallas, a_bits)
+
+    @jax.jit
+    def fn(p, x):
+        return cnn_lib.cnn_forward(p, cfg, x, conv_fn=conv_fn, fc_fn=fc_fn)
+
+    @jax.jit
+    def fn_exits(p, x):
+        return cnn_lib.cnn_forward(p, cfg, x, collect_exits=True,
+                                   conv_fn=conv_fn, fc_fn=fc_fn)
+
+    return ServingModel(cfg=cfg, params=qparams, fn=fn,
+                        fn_exits=fn_exits if cfg.exit_stages else None)
+
+
+def export_lm(params, cfg) -> ServingModel:
+    """Int8 export for the LM family: ``layers.dense`` consumes the
+    {'w_q','scale'} form directly (in-register dequant; Pallas quant_matmul
+    on TPU via the launch/steps serve step).  Exit-head serving for LMs
+    stays with family.exit_logits."""
+    from repro.models import transformer as tfm
+    w_bits, _ = _serving_bits(cfg)
+    qparams = quantize_params_for_serving(params, bits=w_bits)
+
+    @jax.jit
+    def fn(p, tokens):
+        return tfm.forward(p, cfg, tokens)
+
+    return ServingModel(cfg=cfg, params=qparams, fn=fn)
+
+
+def export_chain(state, *, use_pallas=None) -> ServingModel:
+    """Export a finished ChainState (core/passes.py) for serving."""
+    from repro.core.family import CNNFamily
+    if isinstance(state.family, CNNFamily):
+        return export_cnn(state.params, state.cfg, use_pallas=use_pallas)
+    return export_lm(state.params, state.cfg)

@@ -1,3 +1,22 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+"""Pallas TPU kernels for the compression chain — which kernel serves which
+pass (D→P→Q→E):
+
+====================  =====================================================
+Pass / phase          Kernel
+====================  =====================================================
+Q at inference        ``quant_matmul.py`` — W8A8 int8 MXU matmul, fused
+                      dequant(+bias+ReLU) epilogue (fc / exit heads)
+Q at inference        ``quant_conv.py`` — NHWC conv lowered to int8 matmul
+                      tiles via im2col K-axis accumulation (conv layers)
+Q during QAT          ``fake_quant.py`` — per-channel quantize→dequantize;
+                      two-kernel amax→quantize, or ``fake_quant_fused``
+                      (single HBM pass)
+E at decode           ``decode_attention.py`` — flash-decode (+int8-KV
+                      variant) behind the early-exit serving loop
+====================  =====================================================
+
+``ops.py`` holds the jit'd public wrappers (interpret-mode on CPU, oracle
+fallbacks); ``ref.py`` the pure-jnp oracles every kernel is tested against;
+``tiling.py`` the shared block-fitting/padding policy.  The export pass in
+core/export.py is what routes a compressed model onto these kernels.
+"""

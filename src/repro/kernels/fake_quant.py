@@ -1,10 +1,21 @@
 """Fused per-channel fake-quantization Pallas kernels (the QAT hot op).
 
 QAT evaluates quantize→dequantize on every weight every step.  XLA's naive
-lowering materializes abs/max/round intermediates in HBM; here the abs-max
-reduction and the rounding pass are two VMEM-tiled kernels (reduction
-kernel accumulates per-column amax across K tiles; quantize kernel is a
-single elementwise sweep with the (bn,)-scales block resident in VMEM).
+lowering materializes abs/max/round intermediates in HBM; here there are two
+strategies:
+
+* :func:`fake_quant` — two VMEM-tiled kernels (reduction kernel accumulates
+  per-column amax across K tiles; quantize kernel is a single elementwise
+  sweep with the (bn,)-scales block resident in VMEM).  W streams through
+  HBM twice (amax read + quantize read/write).
+* :func:`fake_quant_fused` — single-pass variant: each grid step holds a
+  full (K, bn) column stripe in VMEM, computes the per-column amax and
+  quantizes in one sweep, so W is read from HBM exactly once.  Use it when
+  the stripe fits VMEM (K * bn * 4B ≲ a few MB — true for every weight in
+  this repo); fall back to the two-kernel version for huge K.
+
+Awkward dims are zero-padded to the next 128 multiple and sliced back
+(zero rows never win the abs-max; see kernels/tiling.py).
 """
 from __future__ import annotations
 
@@ -13,15 +24,8 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
 
-
-def _fit(block: int, dim: int) -> int:
-    """Largest divisor of ``dim`` that is <= ``block`` (prefers mult. of 128)."""
-    b = min(block, dim)
-    while dim % b:
-        b -= 1
-    return b
+from repro.kernels.tiling import fit_or_pad
 
 
 def _amax_kernel(w_ref, o_ref, *, n_k):
@@ -42,26 +46,64 @@ def _quant_kernel(w_ref, amax_ref, o_ref, *, qmax):
                   * scale[None, :]).astype(o_ref.dtype)
 
 
+def _fused_kernel(w_ref, o_ref, *, qmax):
+    w = w_ref[...].astype(jnp.float32)
+    amax = jnp.max(jnp.abs(w), axis=0)
+    scale = jnp.maximum(amax, 1e-8) / qmax
+    q = jnp.clip(jnp.round(w / scale[None, :]), -qmax - 1, qmax)
+    o_ref[...] = (q * scale[None, :]).astype(o_ref.dtype)
+
+
+def _pad2(w, K, N, Kp, Np):
+    if (Kp, Np) != (K, N):
+        w = jnp.pad(w, ((0, Kp - K), (0, Np - N)))
+    return w
+
+
 @functools.partial(jax.jit, static_argnames=('bits', 'bk', 'bn', 'interpret'))
 def fake_quant(w, *, bits=8, bk=512, bn=256, interpret=False):
     """Per-output-channel (last-dim) symmetric fake quant of w (K, N)."""
     K, N = w.shape
-    bk, bn = _fit(bk, K), _fit(bn, N)
+    (bk, Kp), (bn, Np) = fit_or_pad(bk, K), fit_or_pad(bn, N)
+    w = _pad2(w, K, N, Kp, Np)
     qmax = 2.0 ** (bits - 1) - 1.0
     amax = pl.pallas_call(
-        functools.partial(_amax_kernel, n_k=K // bk),
-        grid=(N // bn, K // bk),
+        functools.partial(_amax_kernel, n_k=Kp // bk),
+        grid=(Np // bn, Kp // bk),
         in_specs=[pl.BlockSpec((bk, bn), lambda j, k: (k, j))],
         out_specs=pl.BlockSpec((bn,), lambda j, k: (j,)),
-        out_shape=jax.ShapeDtypeStruct((N,), jnp.float32),
+        out_shape=jax.ShapeDtypeStruct((Np,), jnp.float32),
         interpret=interpret,
     )(w.astype(jnp.float32))
-    return pl.pallas_call(
+    out = pl.pallas_call(
         functools.partial(_quant_kernel, qmax=qmax),
-        grid=(K // bk, N // bn),
+        grid=(Kp // bk, Np // bn),
         in_specs=[pl.BlockSpec((bk, bn), lambda i, j: (i, j)),
                   pl.BlockSpec((bn,), lambda i, j: (j,))],
         out_specs=pl.BlockSpec((bk, bn), lambda i, j: (i, j)),
-        out_shape=jax.ShapeDtypeStruct((K, N), w.dtype),
+        out_shape=jax.ShapeDtypeStruct((Kp, Np), w.dtype),
         interpret=interpret,
     )(w, amax)
+    return out[:K, :N] if (Kp, Np) != (K, N) else out
+
+
+@functools.partial(jax.jit, static_argnames=('bits', 'bn', 'interpret'))
+def fake_quant_fused(w, *, bits=8, bn=256, interpret=False):
+    """Single-pass fake quant: one HBM read of W instead of two.
+
+    Holds a full (K, bn) column stripe in VMEM per grid step, so the amax
+    reduction and the rounding sweep fuse into one kernel.
+    """
+    K, N = w.shape
+    bn, Np = fit_or_pad(bn, N)
+    w = _pad2(w, K, N, K, Np)
+    qmax = 2.0 ** (bits - 1) - 1.0
+    out = pl.pallas_call(
+        functools.partial(_fused_kernel, qmax=qmax),
+        grid=(Np // bn,),
+        in_specs=[pl.BlockSpec((K, bn), lambda j: (0, j))],
+        out_specs=pl.BlockSpec((K, bn), lambda j: (0, j)),
+        out_shape=jax.ShapeDtypeStruct((K, Np), w.dtype),
+        interpret=interpret,
+    )(w)
+    return out[:, :N] if Np != N else out

@@ -5,6 +5,13 @@ executes the kernel body in Python for correctness validation; on TPU the
 same BlockSpecs compile to Mosaic.  ``use_pallas=False`` falls back to the
 pure-jnp oracle (used by models at training time on CPU, where interpret
 mode is too slow to train through).
+
+Serving entry points (consumed by core/export.py):
+
+* :func:`prequantize_weight` — per-out-channel weight int8 quantization,
+  run ONCE at export; the returned (w_q, sw) are static at serve time.
+* :func:`quant_dense` / :func:`quant_conv_nhwc` — dynamic activation
+  quantization + the int8 Pallas matmul/conv kernels with fused epilogue.
 """
 from __future__ import annotations
 
@@ -14,6 +21,8 @@ import jax.numpy as jnp
 from repro.kernels import ref
 from repro.kernels.decode_attention import decode_attention as _pallas_decode
 from repro.kernels.fake_quant import fake_quant as _pallas_fake_quant
+from repro.kernels.fake_quant import fake_quant_fused as _pallas_fq_fused
+from repro.kernels.quant_conv import quant_conv as _pallas_qconv
 from repro.kernels.quant_matmul import quant_matmul as _pallas_qmm
 
 
@@ -21,15 +30,32 @@ def _interpret() -> bool:
     return jax.default_backend() == 'cpu'
 
 
-def quant_matmul(x_q, w_q, sx, sw, *, use_pallas=True, **kw):
+def quant_matmul(x_q, w_q, sx, sw, bias=None, *, use_pallas=True, relu=False,
+                 **kw):
     if not use_pallas:
-        return ref.quant_matmul_ref(x_q, w_q, sx, sw)
-    return _pallas_qmm(x_q, w_q, sx, sw, interpret=_interpret(), **kw)
+        y = ref.quant_matmul_ref(x_q, w_q, sx, sw)
+        if bias is not None:
+            y = y + bias.astype(y.dtype)
+        return jnp.maximum(y, 0.0) if relu else y
+    return _pallas_qmm(x_q, w_q, sx, sw, bias, relu=relu,
+                       interpret=_interpret(), **kw)
 
 
-def fake_quant(w, bits=8, *, use_pallas=True, **kw):
+def fake_quant(w, bits=8, *, use_pallas=True, fused=None, **kw):
+    """Fake-quantize w; ``fused`` selects the single-HBM-pass kernel.
+
+    ``fused=None`` (auto) picks it whenever the (K, bn) column stripe fits
+    a conservative VMEM budget — true for every weight in this repo — and
+    falls back to the two-kernel amax→quantize path for huge K.
+    """
     if not use_pallas:
         return ref.fake_quant_ref(w, bits)
+    if fused is None:
+        bn = kw.get('bn', 256)
+        fused = w.shape[0] * min(bn, w.shape[1]) * 4 <= 4 * 2 ** 20
+    if fused:
+        kw.pop('bk', None)
+        return _pallas_fq_fused(w, bits=bits, interpret=_interpret(), **kw)
     return _pallas_fake_quant(w, bits=bits, interpret=_interpret(), **kw)
 
 
@@ -42,14 +68,83 @@ def decode_attention(q, k, v, valid, *, use_pallas=True, **kw):
     return _pallas_decode(q, k, v, valid, interpret=_interpret(), **kw)
 
 
-def quantize_dense_int8(x, w):
+# --------------------------------------------------------- int8 serving path
+
+
+def _act_qmax(a_bits: int) -> float:
+    return 2.0 ** (a_bits - 1) - 1.0
+
+
+def prequantize_weight(w, *, bits: int = 8):
+    """Per-out-channel (last dim) symmetric int8 weight quantization.
+
+    Run once at export time — the serving kernels consume (w_q, sw) as
+    static operands and never recompute the weight abs-max.  Works on any
+    rank: the reduction covers every axis but the last.  Routes through
+    core.quantization.quantize_weight (the single weight quantizer, incl.
+    the bits=1 DoReFa branch).  Returns (w_q int8, sw (out,) fp32).
+    """
+    from repro.core.quantization import quantize_weight
+    w_q, scale = quantize_weight(w.astype(jnp.float32), bits, axis=-1)
+    return w_q.astype(jnp.int8), scale.reshape(-1).astype(jnp.float32)
+
+
+def quantize_act(x, *, a_bits: int = 8, per_row: bool = False):
+    """Dynamic activation quantization (the only per-call scale compute).
+
+    per_row=True gives each row of a 2D x its own scale; otherwise one
+    per-tensor scale (matching core.quantization.fake_quant_act's QAT
+    clip, so serving stays on the QAT grid).  Returns (x_q int8, sx).
+    """
+    qmax = _act_qmax(a_bits)
+    if per_row:
+        s = jnp.maximum(jnp.max(jnp.abs(x), axis=1), 1e-8) / qmax
+        xq = jnp.clip(jnp.round(x / s[:, None]), -qmax - 1, qmax)
+    else:
+        s = jnp.maximum(jnp.max(jnp.abs(x)), 1e-8) / qmax
+        xq = jnp.clip(jnp.round(x / s), -qmax - 1, qmax)
+    return xq.astype(jnp.int8), s.astype(jnp.float32)
+
+
+def quant_dense(x, w_q, sw, *, a_bits=8, per_row=True, use_pallas=True, **kw):
+    """Int8 dense with prequantized weights: x fp32 (M,K) @ w_q int8 (K,N).
+
+    Activations are dynamically quantized (per-row or per-tensor scale);
+    weight scales sw (N,) are static.  Returns fp32 (M, N).
+    """
+    xq, sx = quantize_act(x, a_bits=a_bits, per_row=per_row)
+    if not per_row:
+        sx = jnp.full((x.shape[0],), sx, jnp.float32)
+    return quant_matmul(xq, w_q, sx, sw.reshape(-1), use_pallas=use_pallas,
+                        **kw)
+
+
+def quantize_dense_int8(x, w, **kw):
     """Dynamic-quantize x and w to int8 and run the quantized matmul.
 
-    The int8 *serving* path for a dense layer: per-row activation scales,
-    per-column weight scales.  Returns fp32 (M, N).
+    Thin wrapper over prequantize_weight + quant_dense, kept for callers
+    that hold fp32 weights; the serving path prequantizes once at export
+    and calls quant_dense directly.
     """
-    sx = jnp.maximum(jnp.max(jnp.abs(x), axis=1), 1e-8) / 127.0
-    xq = jnp.clip(jnp.round(x / sx[:, None]), -128, 127).astype(jnp.int8)
-    sw = jnp.maximum(jnp.max(jnp.abs(w), axis=0), 1e-8) / 127.0
-    wq = jnp.clip(jnp.round(w / sw[None, :]), -128, 127).astype(jnp.int8)
-    return quant_matmul(xq, wq, sx, sw)
+    w_q, sw = prequantize_weight(w)
+    return quant_dense(x, w_q, sw, **kw)
+
+
+def quant_conv_nhwc(x, w_q, sw, bias=None, *, stride=1, groups=1, relu=False,
+                    a_bits=8, use_pallas=True, **kw):
+    """Int8 NHWC conv with prequantized weights and fused epilogue.
+
+    x fp32 (B,H,W,CIN); w_q int8 (KH,KW,CIN,COUT); sw (COUT,) static.
+    Activations get one dynamic per-tensor scale (the QAT grid).  Grouped
+    convs (depthwise) fall back to a dequantized lax.conv — block-diagonal
+    im2col would waste ~CIN x of MXU tiles on them.
+    """
+    xq, sx = quantize_act(x, a_bits=a_bits)
+    if groups > 1:
+        return ref.quant_conv_ref(xq, w_q, sx, sw, bias, stride=stride,
+                                  relu=relu, groups=groups)
+    if not use_pallas:
+        return ref.quant_conv_ref(xq, w_q, sx, sw, bias, stride=stride,
+                                  relu=relu)
+    return _pallas_qconv(xq, w_q, sx, sw, bias, stride=stride, relu=relu,
+                         interpret=_interpret(), **kw)

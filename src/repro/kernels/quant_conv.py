@@ -1,0 +1,78 @@
+"""Int8 NHWC conv lowered to MXU matmul tiles — the serving realization of
+the paper's Q pass for conv layers.
+
+Lowering: SAME-padded im2col turns the conv into
+``patches (B*OH*OW, KH*KW*CIN) @ w (KH*KW*CIN, COUT)`` — the patch axis
+becomes the matmul K axis, accumulated tile-by-tile in the int32 VMEM
+scratch of the shared quant_matmul kernel (kernels/quant_matmul.py), with
+the dequant + bias + ReLU epilogue fused into the final K step.  Patch
+extraction itself is a pure memory-layout op (shift + concat on int8, done
+once per call by XLA); all the FLOPs run on the Pallas kernel.
+
+Because quantization is symmetric (zero-point 0), the SAME zero-padding is
+value-exact in the quantized domain: padded int8 zeros contribute nothing
+to the int32 accumulator.
+
+Grouped convs (MobileNet depthwise) are block-diagonal in im2col form —
+int8 matmul tiles would be ~CIN x wasted — so the ops-layer wrapper
+(kernels/ops.py) serves them via a dequantized ``lax.conv`` instead; they
+are a negligible MAC fraction of the paper's CNNs.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.quant_matmul import quant_matmul
+
+
+def conv_out_hw(h: int, w: int, stride: int) -> tuple[int, int]:
+    """SAME-padding output spatial dims."""
+    return -(-h // stride), -(-w // stride)
+
+
+def im2col_nhwc(x, kh: int, kw: int, stride: int = 1):
+    """SAME im2col: x (B,H,W,C) -> patches (B*OH*OW, KH*KW*C), plus (OH,OW).
+
+    The flattened patch axis is (kh, kw, C)-major — exactly the order of
+    ``w.reshape(KH*KW*C, COUT)`` for HWIO weights.  Works on any dtype; the
+    int8 serving path feeds already-quantized activations so the zero pad
+    is exact.
+    """
+    B, H, W, C = x.shape
+    oh, ow = conv_out_hw(H, W, stride)
+    pad_h = max((oh - 1) * stride + kh - H, 0)
+    pad_w = max((ow - 1) * stride + kw - W, 0)
+    x = jnp.pad(x, ((0, 0), (pad_h // 2, pad_h - pad_h // 2),
+                    (pad_w // 2, pad_w - pad_w // 2), (0, 0)))
+    cols = [x[:, i:i + (oh - 1) * stride + 1:stride,
+              j:j + (ow - 1) * stride + 1:stride, :]
+            for i in range(kh) for j in range(kw)]
+    patches = jnp.concatenate(cols, axis=-1) if len(cols) > 1 else cols[0]
+    return patches.reshape(B * oh * ow, kh * kw * C), (oh, ow)
+
+
+@functools.partial(jax.jit, static_argnames=('stride', 'relu', 'bm', 'bn',
+                                             'bk', 'out_dtype', 'interpret'))
+def quant_conv(x_q, w_q, sx, sw, bias=None, *, stride=1, relu=False,
+               bm=128, bn=128, bk=256, out_dtype=jnp.float32,
+               interpret=False):
+    """Int8 NHWC conv with fused dequant + bias + ReLU epilogue.
+
+    x_q: int8 (B,H,W,CIN); w_q: int8 (KH,KW,CIN,COUT); sx: scalar fp32
+    per-tensor activation scale; sw: (COUT,) fp32 static per-channel weight
+    scales; bias: (COUT,) fp32 or None.  Returns (B,OH,OW,COUT) out_dtype.
+    """
+    B, H, W, C = x_q.shape
+    kh, kw, c2, n = w_q.shape
+    assert C == c2, (C, c2)
+    patches, (oh, ow) = im2col_nhwc(x_q, kh, kw, stride)
+    m = B * oh * ow
+    out = quant_matmul(patches, w_q.reshape(kh * kw * C, n),
+                       jnp.full((m,), sx, jnp.float32),
+                       sw.astype(jnp.float32), bias,
+                       bm=bm, bn=bn, bk=bk, out_dtype=out_dtype, relu=relu,
+                       interpret=interpret)
+    return out.reshape(B, oh, ow, n)

@@ -8,7 +8,14 @@ resident in VMEM, fp32 dequant fused into the epilogue with per-row
 activation scales and per-column weight scales (also VMEM-resident).
 
 Grid is (M/bm, N/bn, K/bk) with the K axis innermost: the int32 accumulator
-lives in a VMEM scratch and is rescaled+flushed once per (m, n) tile.
+lives in a VMEM scratch and is rescaled+flushed once per (m, n) tile.  The
+epilogue can optionally fuse a per-column bias add and ReLU — this is what
+the exported serving path (core/export.py) uses for conv layers, where the
+matmul K axis is the im2col patch axis.
+
+Awkward dims (primes, non-128 multiples with no decent divisor) are
+zero-padded to the next 128 multiple and sliced back — zero int8 rows/cols
+contribute nothing to the int32 accumulator, so padding is value-exact.
 """
 from __future__ import annotations
 
@@ -19,16 +26,14 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-
-def _fit(block: int, dim: int) -> int:
-    """Largest divisor of ``dim`` that is <= ``block`` (prefers mult. of 128)."""
-    b = min(block, dim)
-    while dim % b:
-        b -= 1
-    return b
+from repro.kernels.tiling import fit_or_pad
 
 
-def _qmm_kernel(x_ref, w_ref, sx_ref, sw_ref, o_ref, acc_ref, *, n_k):
+def _qmm_kernel(*refs, n_k, relu, has_bias):
+    if has_bias:
+        x_ref, w_ref, sx_ref, sw_ref, b_ref, o_ref, acc_ref = refs
+    else:
+        (x_ref, w_ref, sx_ref, sw_ref, o_ref, acc_ref), b_ref = refs, None
     k = pl.program_id(2)
 
     @pl.when(k == 0)
@@ -42,32 +47,55 @@ def _qmm_kernel(x_ref, w_ref, sx_ref, sw_ref, o_ref, acc_ref, *, n_k):
     @pl.when(k == n_k - 1)
     def _done():
         scale = sx_ref[...][:, None] * sw_ref[...][None, :]
-        o_ref[...] = (acc_ref[...].astype(jnp.float32)
-                      * scale).astype(o_ref.dtype)
+        y = acc_ref[...].astype(jnp.float32) * scale
+        if b_ref is not None:
+            y = y + b_ref[...][None, :]
+        if relu:
+            y = jnp.maximum(y, 0.0)
+        o_ref[...] = y.astype(o_ref.dtype)
 
 
 @functools.partial(jax.jit, static_argnames=('bm', 'bn', 'bk', 'out_dtype',
-                                             'interpret'))
-def quant_matmul(x_q, w_q, sx, sw, *, bm=128, bn=128, bk=256,
-                 out_dtype=jnp.float32, interpret=False):
-    """x_q: int8 (M,K); w_q: int8 (K,N); sx: (M,) fp32; sw: (N,) fp32."""
+                                             'relu', 'interpret'))
+def quant_matmul(x_q, w_q, sx, sw, bias=None, *, bm=128, bn=128, bk=256,
+                 out_dtype=jnp.float32, relu=False, interpret=False):
+    """x_q: int8 (M,K); w_q: int8 (K,N); sx: (M,) fp32; sw: (N,) fp32.
+
+    Optional fused epilogue: ``bias`` (N,) fp32 added after dequant, then
+    ReLU when ``relu=True``.  Returns (M, N) ``out_dtype``.
+    """
     M, K = x_q.shape
     K2, N = w_q.shape
     assert K == K2
-    bm, bn, bk = _fit(bm, M), _fit(bn, N), _fit(bk, K)
-    n_k = K // bk
-    grid = (M // bm, N // bn, n_k)
-    return pl.pallas_call(
-        functools.partial(_qmm_kernel, n_k=n_k),
+    (bm, Mp), (bn, Np), (bk, Kp) = (fit_or_pad(bm, M), fit_or_pad(bn, N),
+                                    fit_or_pad(bk, K))
+    if (Mp, Np, Kp) != (M, N, K):
+        x_q = jnp.pad(x_q, ((0, Mp - M), (0, Kp - K)))
+        w_q = jnp.pad(w_q, ((0, Kp - K), (0, Np - N)))
+        sx = jnp.pad(sx, (0, Mp - M))
+        sw = jnp.pad(sw, (0, Np - N))
+        if bias is not None:
+            bias = jnp.pad(bias, (0, Np - N))
+    n_k = Kp // bk
+    grid = (Mp // bm, Np // bn, n_k)
+    in_specs = [
+        pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+        pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
+        pl.BlockSpec((bm,), lambda i, j, k: (i,)),
+        pl.BlockSpec((bn,), lambda i, j, k: (j,)),
+    ]
+    args = [x_q, w_q, sx, sw]
+    if bias is not None:
+        in_specs.append(pl.BlockSpec((bn,), lambda i, j, k: (j,)))
+        args.append(bias.astype(jnp.float32))
+    out = pl.pallas_call(
+        functools.partial(_qmm_kernel, n_k=n_k, relu=relu,
+                          has_bias=bias is not None),
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
-            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
-            pl.BlockSpec((bm,), lambda i, j, k: (i,)),
-            pl.BlockSpec((bn,), lambda i, j, k: (j,)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
-        out_shape=jax.ShapeDtypeStruct((M, N), out_dtype),
+        out_shape=jax.ShapeDtypeStruct((Mp, Np), out_dtype),
         scratch_shapes=[pltpu.VMEM((bm, bn), jnp.int32)],
         interpret=interpret,
-    )(x_q, w_q, sx, sw)
+    )(*args)
+    return out[:M, :N] if (Mp, Np) != (M, N) else out

@@ -20,6 +20,27 @@ def fake_quant_ref(w, bits: int):
     return jnp.clip(jnp.round(w / scale), -qmax - 1, qmax) * scale
 
 
+def quant_conv_ref(x_q, w_q, sx, sw, bias=None, *, stride=1, relu=False,
+                   groups=1, out_dtype=jnp.float32):
+    """lax.conv oracle for kernels/quant_conv.quant_conv.
+
+    Dequantizes both operands and runs the SAME-padded fp32 conv — the conv
+    is bilinear, so this equals the int8-accumulate + epilogue-rescale path
+    up to fp32 rounding.  x_q int8 NHWC, w_q int8 HWIO, sx scalar, sw
+    (COUT,).
+    """
+    x = x_q.astype(jnp.float32) * jnp.asarray(sx, jnp.float32)
+    w = w_q.astype(jnp.float32) * sw.astype(jnp.float32)[None, None, None, :]
+    y = jax.lax.conv_general_dilated(
+        x, w, (stride, stride), 'SAME', feature_group_count=groups,
+        dimension_numbers=('NHWC', 'HWIO', 'NHWC'))
+    if bias is not None:
+        y = y + bias.astype(jnp.float32)
+    if relu:
+        y = jnp.maximum(y, 0.0)
+    return y.astype(out_dtype)
+
+
 def decode_attention_ref(q, k, v, valid):
     """q: (B,H,D); k,v: (B,S,K,D); valid: (B,S) bool. GQA decode oracle."""
     B, H, D = q.shape

@@ -1,0 +1,53 @@
+"""Shared block-fitting for the Pallas kernels (one copy, not N).
+
+Every kernel here tiles a dim into equal blocks, so the block size must
+divide the dim.  The old per-kernel ``_fit`` silently decremented the block
+until it divided — for a prime dim that degrades to block size 1, which on
+TPU is catastrophic (1-wide MXU/VPU tiles).  The shared policy:
+
+* :func:`fit_block` returns the largest divisor <= the requested block, but
+  *raises* once the best divisor drops below ``floor`` instead of silently
+  emitting sliver tiles.
+* :func:`pad_to` gives the next multiple of 128 (the TPU lane width);
+  kernel entry points zero-pad awkward dims up to it and slice the result
+  back, so callers never see the error for value-preserving paddings.
+"""
+from __future__ import annotations
+
+LANE = 128          # TPU lane width: last-dim tiles are always 128 wide
+
+
+def pad_to(dim: int, mult: int = LANE) -> int:
+    """Next multiple of ``mult`` >= dim (dim itself when it already is)."""
+    return -(-dim // mult) * mult
+
+
+def fit_block(block: int, dim: int, *, floor: int = 8) -> int:
+    """Largest divisor of ``dim`` that is <= ``block``.
+
+    Raises ValueError when the best divisor is smaller than
+    ``min(floor, dim)`` — e.g. prime dims, where the old behaviour silently
+    degraded to 1-wide blocks.  Callers should pad the dim to
+    ``pad_to(dim)`` first (the kernel wrappers in this package do).
+    """
+    if dim <= 0:
+        raise ValueError(f'cannot tile empty dim {dim}')
+    b = min(block, dim)
+    while dim % b:
+        b -= 1
+    if b < min(floor, dim):
+        raise ValueError(
+            f'no usable block <= {block} for dim {dim} (best divisor {b}); '
+            f'pad the dim to {pad_to(dim)} (next multiple of {LANE})')
+    return b
+
+
+def fit_or_pad(block: int, dim: int, *, floor: int = 8) -> tuple[int, int]:
+    """(block, padded_dim): like :func:`fit_block`, but instead of raising,
+    returns the block for the 128-padded dim (padded_dim == dim when the
+    original dim already tiles cleanly)."""
+    try:
+        return fit_block(block, dim, floor=floor), dim
+    except ValueError:
+        p = pad_to(dim)
+        return fit_block(block, p, floor=floor), p

@@ -1,0 +1,78 @@
+"""CNN serving launcher: export a compressed CNN and serve batched traffic.
+
+Runs the short chain (or skips straight to export with --no-train), compiles
+the result to the int8 serving path (core/export.py), and drives a batched
+early-exit serving loop over a synthetic eval stream, reporting throughput
+and the per-stage exit distribution — the deployed realization of the
+paper's D→P→Q→E chain.
+
+    PYTHONPATH=src python -m repro.launch.serve_cnn --config resnet8-cifar \
+        --batches 8 --batch 64 --threshold 0.85
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def main():
+    from repro.configs.cnn import CNN_REGISTRY
+    from repro.core.export import export_cnn
+    from repro.core.family import CNNFamily
+    from repro.core.passes import Trainer
+    from repro.data import SyntheticImages
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument('--config', default='resnet8-cifar',
+                    choices=sorted(CNN_REGISTRY))
+    ap.add_argument('--batch', type=int, default=64)
+    ap.add_argument('--batches', type=int, default=8)
+    ap.add_argument('--threshold', type=float, default=0.85)
+    ap.add_argument('--steps', type=int, default=60,
+                    help='QAT fine-tune steps before export (0 = raw init)')
+    ap.add_argument('--pallas', action='store_true',
+                    help='force Pallas kernels (interpret mode on CPU)')
+    args = ap.parse_args()
+
+    fam = CNNFamily(SyntheticImages())
+    cfg = CNN_REGISTRY[args.config]
+    params = fam.init(jax.random.key(0), cfg)
+    params, cfg = fam.add_exits(jax.random.key(1), params, cfg,
+                                fam.default_exit_points(cfg))
+    cfg = cfg.replace(w_bits=8, a_bits=8)
+    if args.steps:
+        trainer = Trainer(batch=args.batch, steps=args.steps)
+        params, _ = trainer.fit(fam, cfg, params)
+
+    model = export_cnn(params, cfg, use_pallas=True if args.pallas else None)
+    stream = fam.eval_batches(args.batches, args.batch)
+    # warm the jit caches off the clock
+    model.serve_early_exit(stream[0][0], threshold=args.threshold)
+
+    stages = {s: 0 for s in cfg.exit_stages}
+    hit = tot = 0
+    t0 = time.perf_counter()
+    for x, y in stream:
+        pred, stage = model.serve_early_exit(x, threshold=args.threshold)
+        jax.block_until_ready(pred)
+        hit += int(jnp.sum(pred == y))
+        tot += int(y.size)
+        for s in stages:
+            stages[s] += int(np.sum(np.asarray(stage) == s))
+    dt = time.perf_counter() - t0
+
+    print(f'config={cfg.name} backend={jax.default_backend()} '
+          f'int8_path={"pallas" if args.pallas else "auto"}')
+    print(f'served {tot} images in {dt:.3f}s '
+          f'({tot / dt:.0f} img/s), acc={hit / max(tot, 1):.3f}')
+    for s in sorted(stages):
+        print(f'  exit@stage{s}: {stages[s] / max(tot, 1):.1%}')
+    print(f'  final head:   {1 - sum(stages.values()) / max(tot, 1):.1%}')
+
+
+if __name__ == '__main__':
+    main()

@@ -27,6 +27,12 @@ def _conv_init(key, kh, kw, cin, cout, dtype=jnp.float32):
 
 
 def conv(p, x, *, stride=1, quant=(0, 0), groups=1):
+    """QAT/fp32 conv: per-call fake-quant hooks on weight and activation.
+
+    This is the *training* path.  The serving path (core/export.py) swaps
+    this out via cnn_forward's ``conv_fn`` for an int8 Pallas conv with
+    static, export-time weight scales.
+    """
     w_bits, a_bits = quant
     w = p['w']
     if w_bits:
@@ -38,6 +44,11 @@ def conv(p, x, *, stride=1, quant=(0, 0), groups=1):
         feature_group_count=groups,
         dimension_numbers=('NHWC', 'HWIO', 'NHWC'))
     return y + p['b'].astype(y.dtype)
+
+
+def out_channels(p) -> int:
+    """Output channels of a conv/fc param dict (fp32 'w' or int8 'w_q')."""
+    return (p['w'] if 'w' in p else p['w_q']).shape[-1]
 
 
 def group_norm(p, x, groups=8, eps=1e-5):
@@ -118,48 +129,58 @@ def init_cnn(key, cfg):
 # -------------------------------------------------------------------- forward
 
 
-def _block_forward(blk, x, kind, stride, quant, expand_ratio):
+def _block_forward(blk, x, kind, stride, quant, expand_ratio, conv_fn):
     if kind == 'resnet':
         h = jax.nn.relu(group_norm(blk['n1'],
-                                   conv(blk['conv1'], x, stride=stride,
-                                        quant=quant)))
-        h = group_norm(blk['n2'], conv(blk['conv2'], h, quant=quant))
-        skip = conv(blk['proj'], x, stride=stride, quant=quant) \
+                                   conv_fn(blk['conv1'], x, stride=stride,
+                                           quant=quant)))
+        h = group_norm(blk['n2'], conv_fn(blk['conv2'], h, quant=quant))
+        skip = conv_fn(blk['proj'], x, stride=stride, quant=quant) \
             if 'proj' in blk else x
         return jax.nn.relu(h + skip)
     if kind == 'vgg':
         h = jax.nn.relu(group_norm(blk['n1'],
-                                   conv(blk['conv1'], x, stride=stride,
-                                        quant=quant)))
+                                   conv_fn(blk['conv1'], x, stride=stride,
+                                           quant=quant)))
         return h
     # mobilenet
-    e = blk['expand']['w'].shape[-1]
-    h = jax.nn.relu6(group_norm(blk['n1'], conv(blk['expand'], x, quant=quant)))
+    e = out_channels(blk['expand'])
+    h = jax.nn.relu6(group_norm(blk['n1'],
+                                conv_fn(blk['expand'], x, quant=quant)))
     h = jax.nn.relu6(group_norm(blk['n2'],
-                                conv(blk['dw'], h, stride=stride, quant=quant,
-                                     groups=e)))
-    h = group_norm(blk['n3'], conv(blk['project'], h, quant=quant))
+                                conv_fn(blk['dw'], h, stride=stride,
+                                        quant=quant, groups=e)))
+    h = group_norm(blk['n3'], conv_fn(blk['project'], h, quant=quant))
     if stride == 1 and x.shape[-1] == h.shape[-1]:
         h = h + x
     return h
 
 
-def cnn_forward(params, cfg, x, *, collect_exits=False):
-    """x: (B, H, W, C) -> logits (B, classes); optionally exit logits dict."""
+def cnn_forward(params, cfg, x, *, collect_exits=False, conv_fn=None,
+                fc_fn=None):
+    """x: (B, H, W, C) -> logits (B, classes); optionally exit logits dict.
+
+    ``conv_fn``/``fc_fn`` inject the layer implementation: the default is
+    the QAT fake-quant path (:func:`conv`/:func:`fc`); core/export.py
+    injects int8 serving layers over the same topology, so training and
+    serving cannot drift structurally.
+    """
+    conv_fn = conv_fn or conv
+    fc_fn = fc_fn or fc
     quant = (cfg.w_bits, cfg.a_bits)
     h = jax.nn.relu(group_norm(params['stem_norm'],
-                               conv(params['stem'], x, quant=quant)))
+                               conv_fn(params['stem'], x, quant=quant)))
     exits = {}
     for s, blocks in enumerate(params['stages']):
         for b, blk in enumerate(blocks):
             stride = 2 if (b == 0 and s > 0) else 1
             h = _block_forward(blk, h, cfg.kind, stride, quant,
-                               cfg.expand_ratio)
+                               cfg.expand_ratio, conv_fn)
         if collect_exits and 'exits' in params and str(s) in params['exits']:
             feat = h.mean(axis=(1, 2))
-            exits[s] = fc(params['exits'][str(s)], feat, quant=quant)
+            exits[s] = fc_fn(params['exits'][str(s)], feat, quant=quant)
     feat = h.mean(axis=(1, 2))
-    logits = fc(params['head'], feat, quant=quant)
+    logits = fc_fn(params['head'], feat, quant=quant)
     if collect_exits:
         return logits, exits
     return logits

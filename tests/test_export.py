@@ -1,0 +1,271 @@
+"""Export-and-serve subsystem tests: the compiled int8 path must match the
+fake-quant QAT oracle, compute no per-call weight scales, and the new
+quant_conv kernel must match its lax.conv oracle in interpret mode."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.cnn import (MOBILENET_SMALL_CIFAR, RESNET8_CIFAR,
+                               VGG8_CIFAR)
+from repro.core import quantization as quant_lib
+from repro.core.export import early_exit_batch, export_chain, export_cnn
+from repro.core.family import CNNFamily
+from repro.core.passes import ChainState
+from repro.data import SyntheticImages
+from repro.kernels import ops, ref
+from repro.kernels.quant_conv import im2col_nhwc, quant_conv
+from repro.kernels.tiling import fit_block, fit_or_pad, pad_to
+from repro.models.cnn import cnn_forward, init_cnn
+
+CONFIGS = {'resnet': RESNET8_CIFAR, 'vgg': VGG8_CIFAR,
+           'mobilenet': MOBILENET_SMALL_CIFAR}
+
+
+def _with_exits(base, key=2):
+    fam = CNNFamily(SyntheticImages())
+    params = fam.init(jax.random.key(0), base)
+    params, cfg = fam.add_exits(jax.random.key(key), params, base,
+                                fam.default_exit_points(base))
+    return fam, params, cfg.replace(w_bits=8, a_bits=8)
+
+
+# ------------------------------------------------------------ exported path
+
+
+@pytest.mark.parametrize('kind', sorted(CONFIGS))
+def test_export_matches_fake_quant_oracle(kind):
+    """Exported int8 serving == fake-quant fp32 forward (same quant grids,
+    bilinear kernels) up to fp32 accumulation noise, incl. exit heads."""
+    _, params, cfg = _with_exits(CONFIGS[kind])
+    x = jax.random.normal(jax.random.key(1), (8, 32, 32, 3))
+    oracle, oracle_exits = jax.jit(
+        lambda p, x: cnn_forward(p, cfg, x, collect_exits=True))(params, x)
+    model = export_cnn(params, cfg)
+    served, served_exits = model.fn_exits(model.params, x)
+    scale = float(jnp.max(jnp.abs(oracle)))
+    np.testing.assert_allclose(np.asarray(served), np.asarray(oracle),
+                               atol=1e-3 * max(scale, 1.0))
+    assert set(served_exits) == set(oracle_exits)
+    for s in oracle_exits:
+        np.testing.assert_allclose(np.asarray(served_exits[s]),
+                                   np.asarray(oracle_exits[s]), atol=1e-3)
+
+
+def test_export_pallas_matches_jnp_path():
+    """Pallas interpret-mode serving == the jnp int8 reference serving."""
+    cfg = RESNET8_CIFAR.replace(w_bits=8, a_bits=8)
+    params = init_cnn(jax.random.key(0), cfg)
+    x = jax.random.normal(jax.random.key(1), (2, 16, 16, 3))
+    m_ref = export_cnn(params, cfg, use_pallas=False)
+    m_pls = export_cnn(params, cfg, use_pallas=True)
+    np.testing.assert_allclose(np.asarray(m_pls.serve(x)),
+                               np.asarray(m_ref.serve(x)),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_export_low_bit_chain_cfg():
+    """Chain-style cfg (w_bits=4, a_bits=8) exports on the 4-bit grid."""
+    cfg = VGG8_CIFAR.replace(w_bits=4, a_bits=8)
+    params = init_cnn(jax.random.key(0), cfg)
+    x = jax.random.normal(jax.random.key(1), (4, 32, 32, 3))
+    oracle = jax.jit(lambda p, x: cnn_forward(p, cfg, x))(params, x)
+    served = export_cnn(params, cfg).serve(x)
+    scale = float(jnp.max(jnp.abs(oracle)))
+    np.testing.assert_allclose(np.asarray(served), np.asarray(oracle),
+                               atol=1e-3 * max(scale, 1.0))
+    # 4-bit grid: stored int8 values stay within [-8, 7]
+    leaves = [v for v in jax.tree_util.tree_leaves(
+        export_cnn(params, cfg).params) if v.dtype == jnp.int8]
+    assert leaves and all(int(jnp.max(jnp.abs(v))) <= 8 for v in leaves)
+
+
+def test_export_binary_weights_finite():
+    """w_bits=1 (DoReFa sign*mean) exports without inf scales / NaN logits
+    — all serving quantizers route through quantize_weight's bits=1
+    branch."""
+    cfg = VGG8_CIFAR.replace(w_bits=1, a_bits=8)
+    params = init_cnn(jax.random.key(0), cfg)
+    model = export_cnn(params, cfg)
+    served = model.serve(jnp.ones((2, 32, 32, 3)))
+    assert bool(jnp.all(jnp.isfinite(served)))
+    ints = [v for v in jax.tree_util.tree_leaves(model.params)
+            if v.dtype == jnp.int8]
+    assert ints and all(int(jnp.max(jnp.abs(v))) <= 1 for v in ints)
+
+
+def test_export_static_weight_scales():
+    """Tracing the serving fn computes NO weight scales; tracing the
+    fake-quant forward computes one per weight (the per-call recompute the
+    export pass eliminates)."""
+    cfg = RESNET8_CIFAR.replace(w_bits=8, a_bits=8)
+    params = init_cnn(jax.random.key(0), cfg)
+    model = export_cnn(params, cfg)
+    x = jax.random.normal(jax.random.key(1), (2, 32, 32, 3))
+
+    before = quant_lib.WEIGHT_SCALE_COMPUTATIONS[0]
+    jax.make_jaxpr(lambda x: model.fn(model.params, x))(x)
+    assert quant_lib.WEIGHT_SCALE_COMPUTATIONS[0] == before
+
+    jax.make_jaxpr(lambda x: cnn_forward(params, cfg, x))(x)
+    assert quant_lib.WEIGHT_SCALE_COMPUTATIONS[0] > before
+
+
+def test_export_chain_dispatch():
+    fam, params, cfg = _with_exits(RESNET8_CIFAR)
+    st = ChainState(family=fam, cfg=cfg, params=params,
+                    key=jax.random.key(0))
+    model = export_chain(st)
+    assert model.fn_exits is not None
+    out = model.serve(jnp.zeros((2, 32, 32, 3)))
+    assert out.shape == (2, cfg.num_classes)
+
+
+# ------------------------------------------------------- batched early exit
+
+
+def test_early_exit_batch_selection():
+    """Earliest confident exit wins; unconfident samples reach the head."""
+    logits = jnp.array([[0.0, 5.0], [5.0, 0.0], [0.0, 5.0]])
+    exits = {
+        0: jnp.array([[9.0, 0.0], [0.1, 0.0], [0.0, 0.1]]),   # conf, no, no
+        1: jnp.array([[0.0, 9.0], [9.0, 0.0], [0.1, 0.0]]),   # conf, conf, no
+    }
+    pred, stage = early_exit_batch(logits, exits, threshold=0.9)
+    np.testing.assert_array_equal(np.asarray(stage), [0, 1, -1])
+    np.testing.assert_array_equal(np.asarray(pred), [0, 0, 1])
+
+
+def test_serve_early_exit_runs_batched():
+    _, params, cfg = _with_exits(RESNET8_CIFAR)
+    model = export_cnn(params, cfg)
+    x = jax.random.normal(jax.random.key(3), (16, 32, 32, 3))
+    pred, stage = model.serve_early_exit(x, threshold=0.5)
+    assert pred.shape == (16,) and stage.shape == (16,)
+    assert bool(jnp.all((stage >= -1)
+                        & (stage < len(cfg.stage_blocks))))
+
+
+# ----------------------------------------------------------- quant_conv
+
+
+@pytest.mark.parametrize('stride,relu', [(1, False), (2, False), (1, True)])
+def test_quant_conv_matches_lax_conv_oracle(stride, relu):
+    """Pallas quant_conv (interpret) == lax.conv on dequantized operands."""
+    k = jax.random.key(0)
+    x = jax.random.normal(k, (2, 8, 8, 16))
+    w = jax.random.normal(jax.random.fold_in(k, 1), (3, 3, 16, 32)) * 0.1
+    b = jax.random.normal(jax.random.fold_in(k, 2), (32,))
+    w_q, sw = ops.prequantize_weight(w)
+    x_q, sx = ops.quantize_act(x)
+    out = quant_conv(x_q, w_q, sx, sw, b, stride=stride, relu=relu,
+                     interpret=True)
+    expect = ref.quant_conv_ref(x_q, w_q, sx, sw, b, stride=stride,
+                                relu=relu)
+    assert out.shape == expect.shape
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_quant_conv_1x1_and_no_bias():
+    k = jax.random.key(5)
+    x = jax.random.normal(k, (2, 8, 8, 8))
+    w = jax.random.normal(jax.random.fold_in(k, 1), (1, 1, 8, 16)) * 0.2
+    w_q, sw = ops.prequantize_weight(w)
+    x_q, sx = ops.quantize_act(x)
+    out = quant_conv(x_q, w_q, sx, sw, stride=2, interpret=True)
+    expect = ref.quant_conv_ref(x_q, w_q, sx, sw, stride=2)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_im2col_matches_conv_patches():
+    """im2col patch matrix @ flat weights == SAME lax.conv, fp32."""
+    k = jax.random.key(7)
+    for stride in (1, 2):
+        x = jax.random.normal(k, (2, 7, 9, 5))
+        w = jax.random.normal(jax.random.fold_in(k, 1), (3, 3, 5, 4))
+        patches, (oh, ow) = im2col_nhwc(x, 3, 3, stride)
+        got = (patches @ w.reshape(-1, 4)).reshape(2, oh, ow, 4)
+        expect = jax.lax.conv_general_dilated(
+            x, w, (stride, stride), 'SAME',
+            dimension_numbers=('NHWC', 'HWIO', 'NHWC'))
+        np.testing.assert_allclose(np.asarray(got), np.asarray(expect),
+                                   rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------- ops split + shared tiling
+
+
+def test_prequantize_plus_quant_dense_equals_wrapper():
+    k = jax.random.key(0)
+    x = jax.random.normal(k, (32, 128))
+    w = jax.random.normal(jax.random.fold_in(k, 1), (128, 64)) * 0.1
+    w_q, sw = ops.prequantize_weight(w)
+    a = ops.quant_dense(x, w_q, sw)
+    b = ops.quantize_dense_int8(x, w)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-6)
+    rel = float(jnp.max(jnp.abs(a - x @ w)) / jnp.max(jnp.abs(x @ w)))
+    assert rel < 0.02, rel
+
+
+def test_fake_quant_fused_matches_two_pass():
+    w = jax.random.normal(jax.random.key(0), (256, 192))
+    fused = ops.fake_quant(w, 8, fused=True)
+    two = ops.fake_quant(w, 8, fused=False)
+    np.testing.assert_allclose(np.asarray(fused), np.asarray(two),
+                               rtol=1e-6, atol=1e-7)
+    np.testing.assert_allclose(np.asarray(fused),
+                               np.asarray(ref.fake_quant_ref(w, 8)),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_fake_quant_weight_kernel_path_matches_jnp():
+    """The QAT hot-path wiring: kernel-backed fake_quant_weight == the jnp
+    grid, and the STE gradient stays identity (no VJP through Pallas)."""
+    from repro.core.quantization import fake_quant_weight
+    w = jax.random.normal(jax.random.key(0), (128, 96))
+    jnp_out = fake_quant_weight(w, 8, use_kernel=False)
+    krn_out = fake_quant_weight(w, 8, use_kernel=True)
+    np.testing.assert_allclose(np.asarray(krn_out), np.asarray(jnp_out),
+                               rtol=1e-5, atol=1e-6)
+    g = jax.grad(lambda w: jnp.sum(fake_quant_weight(w, 8,
+                                                     use_kernel=True)))(w)
+    np.testing.assert_allclose(np.asarray(g), np.ones_like(w), rtol=1e-6)
+
+
+def test_tiling_fit_block_and_padding():
+    assert fit_block(128, 256) == 128
+    assert fit_block(128, 96) == 96
+    assert fit_block(128, 97) == 97              # dim fits in one block: fine
+    with pytest.raises(ValueError, match='pad the dim'):
+        fit_block(64, 97)                        # prime: no silent 1-blocks
+    assert fit_or_pad(64, 97) == (64, 128)
+    assert pad_to(97) == 128 and pad_to(128) == 128
+
+
+def test_prime_dims_pad_through_kernels():
+    """Prime dims LARGER than the block no longer degrade to 1-wide blocks
+    — the kernels zero-pad to the next 128 multiple and slice back.  Dims
+    like 257/131/139 with 128 blocks force the pad branch (fit_or_pad must
+    pad all three: no divisor of a prime > block exceeds the floor)."""
+    k = jax.random.key(0)
+    M, K, N = 257, 131, 139
+    assert fit_or_pad(128, M)[1] > M           # the pad branch is live
+    xq = jax.random.randint(k, (M, K), -128, 128, jnp.int8)
+    wq = jax.random.randint(jax.random.fold_in(k, 1), (K, N), -128, 128,
+                            jnp.int8)
+    sx = jnp.full((M,), 0.01)
+    sw = jnp.full((N,), 0.02)
+    b = jax.random.normal(k, (N,))
+    from repro.kernels.quant_matmul import quant_matmul
+    out = quant_matmul(xq, wq, sx, sw, b, bm=128, bn=128, bk=128,
+                       relu=True, interpret=True)
+    expect = jnp.maximum(ref.quant_matmul_ref(xq, wq, sx, sw) + b, 0)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                               rtol=1e-5, atol=1e-5)
+    from repro.kernels.fake_quant import fake_quant
+    w = jax.random.normal(k, (257, 131))
+    np.testing.assert_allclose(
+        np.asarray(fake_quant(w, bits=8, bk=128, bn=128, interpret=True)),
+        np.asarray(ref.fake_quant_ref(w, 8)), rtol=1e-5, atol=1e-6)

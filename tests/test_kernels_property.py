@@ -1,0 +1,53 @@
+"""Hypothesis property tests for the Pallas kernels.
+
+Kept separate from test_kernels.py so the shape/dtype sweeps still collect
+when hypothesis is not installed (the dep lives in requirements-dev.txt).
+"""
+import pytest
+
+pytest.importorskip('hypothesis')
+
+import jax                                                   # noqa: E402
+import jax.numpy as jnp                                      # noqa: E402
+import numpy as np                                           # noqa: E402
+from hypothesis import given, settings, strategies as st     # noqa: E402
+
+from repro.kernels import ref                                # noqa: E402
+from repro.kernels.decode_attention import decode_attention  # noqa: E402
+
+
+@settings(max_examples=20, deadline=None)
+@given(bits=st.integers(2, 8), seed=st.integers(0, 2**31 - 1))
+def test_fake_quant_properties(bits, seed):
+    """Idempotence + bounded error + level count <= 2^bits."""
+    w = jax.random.normal(jax.random.key(seed), (64, 64))
+    q1 = ref.fake_quant_ref(w, bits)
+    q2 = ref.fake_quant_ref(q1, bits)
+    np.testing.assert_allclose(np.asarray(q1), np.asarray(q2),
+                               rtol=1e-5, atol=1e-6)     # idempotent
+    qmax = 2.0 ** (bits - 1) - 1
+    scale = np.abs(np.asarray(w)).max(0) / qmax
+    err = np.abs(np.asarray(q1 - w))
+    assert (err <= 0.5 * scale[None, :] + 1e-6).all()    # half-step bound
+    for col in range(0, 64, 16):
+        levels = np.unique(np.asarray(q1[:, col]))
+        assert len(levels) <= 2 ** bits
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1),
+       frac=st.floats(0.1, 1.0))
+def test_decode_attention_mask_property(seed, frac):
+    """Output must equal attention computed only over the valid prefix."""
+    B, H, K, D, S = 1, 4, 2, 32, 256
+    k = jax.random.key(seed)
+    q = jax.random.normal(k, (B, H, D))
+    kk = jax.random.normal(jax.random.fold_in(k, 1), (B, S, K, D))
+    vv = jax.random.normal(jax.random.fold_in(k, 2), (B, S, K, D))
+    n = max(1, int(S * frac))
+    valid = jnp.arange(S) < n
+    out = decode_attention(q, kk, vv, valid, s_blk=64, interpret=True)
+    trunc = ref.decode_attention_ref(q, kk[:, :n], vv[:, :n],
+                                     jnp.ones((B, n), bool))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(trunc),
+                               rtol=1e-4, atol=1e-5)

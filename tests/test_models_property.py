@@ -1,8 +1,12 @@
 """Property-based tests on model-substrate invariants (hypothesis)."""
-import jax
-import jax.numpy as jnp
-import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+pytest.importorskip('hypothesis')
+
+import jax                                                   # noqa: E402
+import jax.numpy as jnp                                      # noqa: E402
+import numpy as np                                           # noqa: E402
+from hypothesis import given, settings, strategies as st     # noqa: E402
 
 from repro.models import attention as attn
 from repro.models import recurrent as rec
