@@ -1,11 +1,15 @@
-"""Paper Tables 2-4 (+ beyond-paper LM transfer): the optimal DPQE chain on
+"""Paper Tables 2-4 (+ beyond-paper LM transfer): the optimal chain on
 every model family.
 
-CNN side (the paper's own): ResNet / VGG / MobileNetV2 CIFAR-style configs
-on the synthetic image task.  LM side (beyond paper): the chain applied to a
-reduced tinyllama and mixtral (expert pruning) on the synthetic token task —
-demonstrating that the sequence law is architecture-agnostic, which is the
-transferable claim of the paper.
+The sequence is taken from ``theoretical_order()`` over the *full pass
+registry* (D->P->L->Q->E with the built-in five — grows automatically when
+passes register), so this driver is the N-pass generalization of the
+paper's DPQE tables.  CNN side (the paper's own): ResNet / VGG /
+MobileNetV2 CIFAR-style configs on the synthetic image task.  LM side
+(beyond paper): the chain applied to a reduced tinyllama and mixtral
+(expert pruning) on the synthetic token task — demonstrating that the
+sequence law is architecture-agnostic, which is the transferable claim of
+the paper.
 
 Usage: PYTHONPATH=src python -m benchmarks.chain_archs [--steps 120]
 """
@@ -22,29 +26,32 @@ from repro.configs.cnn import (MOBILENET_SMALL_CIFAR, RESNET8_CIFAR,
 from repro.core.chain import run_chain
 from repro.core.family import LMFamily
 from repro.core.passes import Trainer, init_chain_state
+from repro.core.planner import theoretical_order
 from repro.data import SyntheticTokens
 
 
-def run_cnn(steps=120):
+def run_cnn(steps=120, sequence=None):
+    seq = sequence or theoretical_order()       # full registry: DPLQE
     fam = common.make_family()
     tr = common.make_trainer(steps)
-    out = {}
+    out = {'sequence': seq}
     for cfg in (RESNET8_CIFAR, VGG8_CIFAR, MOBILENET_SMALL_CIFAR):
         base = init_chain_state(fam, cfg, jax.random.key(0), tr,
                                 pretrain_steps=steps * 3)
-        _, st = common.chain_samples(fam, tr, base, 'DPQE',
-                                     common.DEFAULT_HPS)
+        _, st = common.chain_samples(fam, tr, base, seq,
+                                     common.hps_for(seq))
         out[cfg.name] = {'history': st.history}
         h0, h1 = st.history[0], st.history[-1]
-        print(f"{cfg.name}: acc {h0['acc']:.3f} -> {h1['acc']:.3f}, "
+        print(f"{cfg.name} [{seq}]: acc {h0['acc']:.3f} -> {h1['acc']:.3f}, "
               f"BitOpsCR {h1['BitOpsCR']:.0f}x, CR {h1['CR']:.1f}x")
     common.save_json('chain_cnn_archs.json', out)
     return out
 
 
-def run_lm(steps=60):
-    out = {}
-    for arch, seq_hps in (
+def run_lm(steps=60, sequence=None):
+    seq = sequence or theoretical_order()
+    out = {'sequence': seq}
+    for arch, overrides in (
             ('tinyllama-1.1b', {'P': {'ratio': 0.3}}),
             ('mixtral-8x7b', {'P': {'ratio': 0.5}})):     # expert pruning
         cfg = get_smoke_config(arch, layers=4).replace(vocab_size=256)
@@ -53,13 +60,12 @@ def run_lm(steps=60):
                      eval_batch=64)
         base = init_chain_state(fam, cfg, jax.random.key(0), tr,
                                 pretrain_steps=steps * 3)
-        hps = dict(common.DEFAULT_HPS)
-        hps.update(seq_hps)
-        hps['Q'] = {'w_bits': 8, 'a_bits': 8}
-        st = run_chain(fam, None, 'DPQE', hps, tr, state=base)
+        hps = common.hps_for(seq, dict(overrides,
+                                       Q={'w_bits': 8, 'a_bits': 8}))
+        st = run_chain(fam, None, seq, hps, tr, state=base)
         out[arch] = {'history': st.history}
         h0, h1 = st.history[0], st.history[-1]
-        print(f"{arch}: acc {h0['acc']:.3f} -> {h1['acc']:.3f}, "
+        print(f"{arch} [{seq}]: acc {h0['acc']:.3f} -> {h1['acc']:.3f}, "
               f"BitOpsCR {h1['BitOpsCR']:.0f}x, CR {h1['CR']:.1f}x")
     common.save_json('chain_lm_archs.json', out)
     return out
@@ -70,7 +76,10 @@ if __name__ == '__main__':
     ap.add_argument('--steps', type=int, default=120)
     ap.add_argument('--lm-steps', type=int, default=60)
     ap.add_argument('--skip-lm', action='store_true')
+    ap.add_argument('--sequence', default=None,
+                    help='override (default: theoretical_order() over the '
+                         'registry)')
     args = ap.parse_args()
-    run_cnn(args.steps)
+    run_cnn(args.steps, sequence=args.sequence)
     if not args.skip_lm:
-        run_lm(args.lm_steps)
+        run_lm(args.lm_steps, sequence=args.sequence)

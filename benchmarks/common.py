@@ -26,6 +26,18 @@ DEFAULT_HPS = {
     'E': {'threshold': 0.85},
 }
 
+# defaults for every registered pass (the chain validates hps against the
+# sequence, so drivers must hand over exactly the keys they run)
+FULL_HPS = dict(DEFAULT_HPS, L={'energy': 0.9})
+
+
+def hps_for(sequence, overrides=None):
+    """Per-key hp dicts for exactly the keys in ``sequence``, from FULL_HPS
+    merged with ``overrides`` — keeps drivers registry-generic."""
+    overrides = overrides or {}
+    return {k: dict(FULL_HPS.get(k, {}), **overrides.get(k, {}))
+            for k in dict.fromkeys(sequence)}
+
 
 def make_family(difficulty=0.45):
     return CNNFamily(SyntheticImages(difficulty=difficulty), image=32)
@@ -40,13 +52,14 @@ def baseline(fam, trainer, cfg=RESNET8_CIFAR, seed=0, pretrain_steps=None):
                             pretrain_steps=pretrain_steps)
 
 
-def chain_samples(fam, trainer, base, sequence, hps):
+def chain_samples(fam, trainer, base, sequence, hps, *, allow_repeats=False):
     """Run a chain from a shared baseline; returns frontier samples
     [(acc, BitOpsCR)] — several per run when E is present (thresholds)."""
     import copy
     st = copy.copy(base)
     st.history = list(base.history)
-    st = run_chain(fam, None, sequence, hps, trainer, state=st)
+    st = run_chain(fam, None, sequence, hps, trainer, state=st,
+                   allow_repeats=allow_repeats)
     last = st.history[-1]
     samples = [(last['acc'], last['BitOpsCR'])]
     if 'E' in sequence:

@@ -1,24 +1,29 @@
 """Paper Figs. 6-11: pairwise order experiments A->B vs B->A.
 
-For every pair of passes, run both orders from a shared trained baseline
-across a small hyperparameter grid, collect (accuracy, BitOpsCR) samples,
-decide the winning order by Pareto-frontier score, and feed the edges to
-the OrderPlanner's topological sort.  The run validates the paper's claim
-that the resulting DAG is acyclic with the unique sorting D->P->Q->E.
+For every pair of *registered* passes (core/registry.py — the paper's four
+plus low-rank 'L' and any third-party pass), run both orders from a shared
+trained baseline across a small hyperparameter grid, collect
+(accuracy, BitOpsCR) samples, decide the winning order by Pareto-frontier
+score, and feed the edges to the OrderPlanner's topological sort.  The run
+validates the paper's claim that the resulting DAG is acyclic and reports
+whether its unique sorting matches ``theoretical_order()`` over the full
+registry (D->P->L->Q->E with the built-in five).  Exact score ties carry
+no experimental evidence: they fall back to the theoretical order and are
+recorded with margin 0.0 so ``resolve_cycles`` drops them first.
 
 Usage: PYTHONPATH=src python -m benchmarks.pairwise_order [--steps 120]
 """
 from __future__ import annotations
 
 import argparse
-import itertools
 
 from benchmarks import common
-from repro.core.planner import OrderPlanner, compare_orders
+from repro.core.planner import OrderPlanner, compare_orders, theoretical_order
 
 GRIDS = {
     'D': [{'factor': 0.75, 'temp': 2.0, 'alpha': 0.5}],
     'P': [{'ratio': 0.4}],
+    'L': [{'energy': 0.9}],
     'Q': [{'w_bits': 4, 'a_bits': 8}],
     'E': [{'threshold': 0.85}],
 }
@@ -26,32 +31,54 @@ GRIDS = {
 WIDE_GRIDS = {                       # --wide: the paper's fuller sweep
     'D': [{'factor': 0.5}, {'factor': 0.35}],
     'P': [{'ratio': 0.3}, {'ratio': 0.5}],
+    'L': [{'energy': 0.8}, {'energy': 0.95}],
     'Q': [{'w_bits': 2, 'a_bits': 8}, {'w_bits': 4, 'a_bits': 8}],
     'E': [{'threshold': 0.85}],
 }
 
 
-def run(steps=120, pairs=None, wide=False):
+def run(steps=120, pairs=None, wide=False, keys=None):
     global GRIDS
     if wide:
         GRIDS = WIDE_GRIDS
     fam = common.make_family()
     tr = common.make_trainer(steps)
     base = common.baseline(fam, tr, pretrain_steps=steps * 3)
-    planner = OrderPlanner('DPQE')
+    planner = OrderPlanner(keys)            # None = the full registry
     results = {}
-    pairs = pairs or list(itertools.combinations('DPQE', 2))
+    pairs = pairs or planner.pairs()
     for a, b in pairs:
         samples = {'AB': [], 'BA': []}
-        for hp_a in GRIDS[a]:
-            for hp_b in GRIDS[b]:
+        blocked = {'AB': None, 'BA': None}
+        for hp_a in GRIDS.get(a, [{}]):
+            for hp_b in GRIDS.get(b, [{}]):
                 hps = {a: hp_a, b: hp_b}
-                s_ab, _ = common.chain_samples(fam, tr, base, a + b, hps)
-                s_ba, _ = common.chain_samples(fam, tr, base, b + a, hps)
-                samples['AB'] += s_ab
-                samples['BA'] += s_ba
+                for d, seq in (('AB', a + b), ('BA', b + a)):
+                    try:
+                        s, _ = common.chain_samples(fam, tr, base, seq, hps)
+                        samples[d] += s
+                    except ValueError as e:
+                        # structurally inapplicable order (e.g. L->P:
+                        # channel-pruning a factored net) — itself evidence
+                        # for the opposite order
+                        blocked[d] = str(e)
+        if blocked['AB'] and blocked['BA']:
+            print(f'pair {a}{b}: both orders inapplicable, skipped')
+            results[a + b] = {'winner': None, 'blocked': blocked}
+            continue
+        if blocked['AB'] or blocked['BA']:
+            winner = 'BA' if blocked['AB'] else 'AB'
+            order = a + b if winner == 'AB' else b + a
+            planner.add_pairwise(a, b, winner)     # structural: full margin
+            results[a + b] = {'winner': order, 'blocked': blocked,
+                              'samples_' + a + b: samples['AB'],
+                              'samples_' + b + a: samples['BA']}
+            print(f'pair {a}{b}: winner {order} '
+                  f'(reverse order inapplicable: '
+                  f'{blocked["AB"] or blocked["BA"]})')
+            continue
         winner, score_ab, score_ba = compare_orders(samples['AB'],
-                                                    samples['BA'])
+                                                    samples['BA'], a, b)
         order = a + b if winner == 'AB' else b + a
         planner.add_pairwise(a, b, winner, abs(score_ab - score_ba))
         results[a + b] = {'winner': order, 'score_' + a + b: score_ab,
@@ -62,9 +89,13 @@ def run(steps=120, pairs=None, wide=False):
               f'(score {score_ab:.4f} vs {score_ba:.4f})')
     dropped = planner.resolve_cycles()
     topo = planner.topological_order()
+    theory = theoretical_order(planner.keys)
     print('topological order:', topo,
           f'(dropped weak edges: {dropped})' if dropped else '(acyclic)')
+    print('theoretical order:', theory,
+          '== empirical' if topo == theory else '!= empirical (investigate)')
     results['topological_order'] = topo
+    results['theoretical_order'] = theory
     results['dropped_edges'] = dropped
     results['baseline_acc'] = base.history[0]['acc']
     common.save_json('pairwise_order.json', results)
@@ -75,5 +106,7 @@ if __name__ == '__main__':
     ap = argparse.ArgumentParser()
     ap.add_argument('--steps', type=int, default=120)
     ap.add_argument('--wide', action='store_true')
+    ap.add_argument('--keys', default=None,
+                    help='pass keys to plan (default: the full registry)')
     args = ap.parse_args()
-    run(args.steps, wide=args.wide)
+    run(args.steps, wide=args.wide, keys=args.keys)

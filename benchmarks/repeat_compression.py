@@ -29,7 +29,8 @@ def run(steps=100):
     # single-pass aggressive vs mild repeated: pruning
     _, st = common.chain_samples(fam, tr, base, 'P', {'P': {'ratio': 0.6}})
     metrics_of(st, 'P_aggressive')
-    _, st = common.chain_samples(fam, tr, base, 'PP', {'P': {'ratio': 0.37}})
+    _, st = common.chain_samples(fam, tr, base, 'PP', {'P': {'ratio': 0.37}},
+                                 allow_repeats=True)
     metrics_of(st, 'P_repeated')
 
     # quantization
@@ -37,7 +38,8 @@ def run(steps=100):
                                  {'Q': {'w_bits': 2, 'a_bits': 8}})
     metrics_of(st, 'Q_aggressive')
     _, st = common.chain_samples(fam, tr, base, 'QQ',
-                                 {'Q': {'w_bits': 4, 'a_bits': 8}})
+                                 {'Q': {'w_bits': 4, 'a_bits': 8}},
+                                 allow_repeats=True)
     # second Q re-runs at 2 bits
     st = PASSES['Q'].apply(st, {'w_bits': 2, 'a_bits': 8}, tr)
     st.metrics(tr, 'Q2')

@@ -48,7 +48,7 @@ def table1_sequence_law():
     base = bo.cnn_bitops(RESNET8_CIFAR)
     dpqe = fam.bitops(RESNET8_CIFAR.replace(w_bits=2, a_bits=8,
                                             exit_stages=(1,)),
-                      exit_probs={1: 0.5}, prune_scale=0.7)
+                      exit_probs={1: 0.5}, mac_scale=0.7)
     bench('table1_chain_finetune_step', grad, params,
           derived=f'DPQE_model_BitOpsCR={base / dpqe:.0f}x')
 

@@ -43,15 +43,20 @@ def main():
         out.append('### Pairwise order experiments (Figs. 6-11)\n')
         out.append('| pair | winner | score A->B | score B->A |')
         out.append('|---|---|---|---|')
-        import itertools
-        for a, b in itertools.combinations('DPQE', 2):
-            r = pw.get(a + b)
-            if r:
-                out.append(f"| {a}{b} | **{r['winner']}** "
-                           f"| {r['score_' + a + b]:.4f} "
-                           f"| {r['score_' + b + a]:.4f} |")
+        # registry-generic: every 2-letter result entry is a pair; pairs
+        # decided structurally (one order inapplicable) carry no scores
+        for key, r in pw.items():
+            if not (isinstance(r, dict) and len(key) == 2
+                    and r.get('winner')):
+                continue
+            a, b = key
+            sa, sb = (r.get('score_' + a + b), r.get('score_' + b + a))
+            fmt = lambda s: f'{s:.4f}' if s is not None else 'structural'
+            out.append(f"| {a}{b} | **{r['winner']}** "
+                       f"| {fmt(sa)} | {fmt(sb)} |")
         out.append(f"\ntopological order: **{pw['topological_order']}**"
-                   f" (dropped weak edges: {pw.get('dropped_edges')})\n")
+                   f" (theoretical: {pw.get('theoretical_order', '?')}, "
+                   f"dropped weak edges: {pw.get('dropped_edges')})\n")
     sl = _load('sequence_law.json')
     if sl:
         out.append('### Sequence law (Table 1)\n')
@@ -73,6 +78,8 @@ def main():
             out.append('| model | baseline acc | final acc | BitOpsCR | CR |')
             out.append('|---|---|---|---|---|')
             for model, d in ca.items():
+                if not (isinstance(d, dict) and 'history' in d):
+                    continue                       # meta keys ('sequence')
                 h0, h1 = d['history'][0], d['history'][-1]
                 out.append(f"| {model} | {h0['acc']:.3f} | {h1['acc']:.3f} "
                            f"| {h1['BitOpsCR']:.0f}x | {h1['CR']:.1f}x |")

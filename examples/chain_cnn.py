@@ -1,16 +1,20 @@
 """End-to-end driver (paper-native): train a CIFAR-style CNN for a few
-hundred steps, then compress it with the paper's optimal chain D->P->Q->E
-and report accuracy / BitOpsCR / CR after every stage.
+hundred steps, then compress it with an ordered pass sequence (default:
+the paper's D->P->Q->E; pass --sequence DPLQE for the 5-pass law with
+low-rank factorization) and report accuracy / BitOpsCR / CR per stage.
 
     PYTHONPATH=src python examples/chain_cnn.py --model resnet8-cifar \
         --steps 300
+
+Any registered pass key works in --sequence (core/registry.py) — the
+pipeline validates the sequence and only accepts hps for keys in it.
 """
 import argparse
 
 import jax
 
 from repro.configs.cnn import CNN_REGISTRY
-from repro.core.chain import OPTIMAL_SEQUENCE, run_chain
+from repro.core.chain import OPTIMAL_SEQUENCE, Pipeline
 from repro.core.family import CNNFamily
 from repro.core.passes import Trainer, init_chain_state
 from repro.data import SyntheticImages
@@ -25,6 +29,8 @@ def main():
     ap.add_argument('--sequence', default=OPTIMAL_SEQUENCE)
     ap.add_argument('--w-bits', type=int, default=2)
     ap.add_argument('--prune-ratio', type=float, default=0.3)
+    ap.add_argument('--energy', type=float, default=0.9,
+                    help="low-rank 'L' spectral-energy threshold")
     args = ap.parse_args()
 
     fam = CNNFamily(SyntheticImages(difficulty=0.55), image=32)
@@ -34,11 +40,13 @@ def main():
     st = init_chain_state(fam, CNN_REGISTRY[args.model], jax.random.key(0),
                           tr, pretrain_steps=args.steps * 3)
     print(f'== compressing with sequence {args.sequence} ==')
-    st = run_chain(fam, None, args.sequence,
-                   {'D': {'factor': 0.5}, 'P': {'ratio': args.prune_ratio},
-                    'Q': {'w_bits': args.w_bits, 'a_bits': 8},
-                    'E': {'threshold': 0.85}},
-                   tr, state=st)
+    defaults = {'D': {'factor': 0.5}, 'P': {'ratio': args.prune_ratio},
+                'L': {'energy': args.energy},
+                'Q': {'w_bits': args.w_bits, 'a_bits': 8},
+                'E': {'threshold': 0.85}}
+    hps = {k: defaults[k] for k in args.sequence if k in defaults}
+    st = Pipeline.from_sequence(args.sequence, hps).run(fam, None, tr,
+                                                        state=st)
     print(f"\n{'stage':10s} {'acc':>7s} {'BitOpsCR':>10s} {'CR':>8s}")
     for h in st.history:
         print(f"{h['pass']:10s} {h['acc']:7.3f} {h['BitOpsCR']:9.1f}x "

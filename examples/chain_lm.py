@@ -36,10 +36,12 @@ def main():
     if cfg.ssm_state:
         seq = 'DQE'          # channel pruning inapplicable to SSD state
         print('(ssm family: P skipped — see DESIGN.md arch-applicability)')
-    st = run_chain(fam, None, seq,
-                   {'D': {'factor': 0.5}, 'P': {'ratio': 0.3},
-                    'Q': {'w_bits': 8, 'a_bits': 8},
-                    'E': {'threshold': 0.8}},
+    defaults = {'D': {'factor': 0.5}, 'P': {'ratio': 0.3},
+                'Q': {'w_bits': 8, 'a_bits': 8},
+                'E': {'threshold': 0.8}}
+    # the pipeline rejects hps for keys outside the sequence: hand over
+    # exactly what runs
+    st = run_chain(fam, None, seq, {k: defaults[k] for k in seq},
                    tr, state=st)
     print(f"\n{'stage':10s} {'next-tok acc':>12s} {'BitOpsCR':>10s} "
           f"{'CR':>8s}")

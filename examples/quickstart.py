@@ -2,13 +2,22 @@
 
     PYTHONPATH=src python examples/quickstart.py --arch tinyllama-1.1b
 
-Serving the compressed model (--serve-cnn): after the D→P→Q→E chain, the
-export pass compiles the fake-quant params down to a genuinely-int8 serving
-function on the Pallas kernels — static per-channel weight scales snapshot
-once at export, convs on kernels/quant_conv.py, fcs on
+Serving the compressed model (--serve-cnn): after the compression chain,
+the export pass compiles the fake-quant params down to a genuinely-int8
+serving function on the Pallas kernels — static per-channel weight scales
+snapshot once at export, convs on kernels/quant_conv.py, fcs on
 kernels/quant_matmul.py, early exits served batched:
 
     PYTHONPATH=src python examples/quickstart.py --serve-cnn
+
+CI smoke (--smoke): registry-consistency check + a tiny P→L→Q pipeline
+through int8 export, exercising the full pass-registry API in seconds.
+
+Migration note (old PASSES dict → registry): compression passes are now
+first-class registry entries (core/registry.py) with typed hyperparameter
+dataclasses; build chains with ``Pipeline.from_sequence('DPLQE', hps)``
+(core/chain.py) instead of indexing the old closed ``PASSES`` dict —
+which survives as a live read-only view for existing call sites.
 """
 import argparse
 
@@ -43,14 +52,48 @@ def serve_cnn_demo():
           'early-exit stages:', [int(s) for s in stage])
 
 
+def smoke_demo():
+    """CI smoke: pass-registry consistency, then a tiny P→L→Q pipeline
+    (typed hps, validated sequence) compiled to int8 serving."""
+    from repro.configs.cnn import RESNET8_CIFAR
+    from repro.core import registry
+    from repro.core.chain import Pipeline
+    from repro.core.family import CNNFamily
+    from repro.core.passes import Trainer, init_chain_state
+    from repro.core.planner import theoretical_order
+    from repro.data import SyntheticImages
+
+    keys = registry.check_consistency()
+    print('registry consistent:', ''.join(keys))
+    print('theoretical order over registry:', theoretical_order())
+
+    fam = CNNFamily(SyntheticImages())
+    tr = Trainer(batch=16, steps=2, eval_n=1, eval_batch=32)
+    st = init_chain_state(fam, RESNET8_CIFAR, jax.random.key(0), tr,
+                          pretrain_steps=2)
+    pipe = Pipeline.from_sequence('PLQ', {'P': {'ratio': 0.3},
+                                          'L': {'energy': 0.9},
+                                          'Q': {'w_bits': 8, 'a_bits': 8}})
+    st = pipe.run(fam, None, tr, state=st)
+    model = pipe.export(st)
+    x, _ = fam.eval_batches(1, 8)[0]
+    print('smoke: stages', [h['pass'] for h in st.history],
+          'served int8 logits', tuple(model.serve(x).shape))
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument('--arch', default='tinyllama-1.1b', choices=ARCH_NAMES)
     ap.add_argument('--steps', type=int, default=20)
     ap.add_argument('--serve-cnn', action='store_true',
                     help='demo: export + serve an int8 compressed CNN')
+    ap.add_argument('--smoke', action='store_true',
+                    help='CI smoke: registry check + tiny pipeline + export')
     args = ap.parse_args()
 
+    if args.smoke:
+        smoke_demo()
+        return
     if args.serve_cnn:
         serve_cnn_demo()
         return

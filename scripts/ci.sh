@@ -1,11 +1,26 @@
 #!/usr/bin/env bash
 # Tier-1 CI entry point: install dev deps (best effort — the container may be
-# offline, in which case hypothesis-only modules skip themselves) and run the
-# canonical test command from ROADMAP.md.
+# offline, in which case hypothesis-only modules skip themselves), run the
+# pass-registry consistency check and the quickstart smoke (registry API +
+# tiny P->L->Q pipeline through int8 export), then the canonical test
+# command from ROADMAP.md.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
 python -m pip install -q -r requirements-dev.txt 2>/dev/null \
     || echo "ci.sh: pip install failed (offline?); property tests will skip"
 
-PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} exec python -m pytest -x -q "$@"
+export PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH}
+
+# every registered pass must carry (kind, granularity) ranks the planner
+# knows, and a defaulted hp dataclass — a bad registration fails CI here
+python - <<'PY'
+import repro.core  # populates the registry (D/P/Q/E + L)
+from repro.core import registry
+keys = registry.check_consistency()
+print('registry consistent:', ''.join(keys))
+PY
+
+python examples/quickstart.py --smoke
+
+exec python -m pytest -x -q "$@"

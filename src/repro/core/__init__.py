@@ -1,3 +1,10 @@
 # The paper's primary contribution — implement the SYSTEM here
 # (scheduler, optimizer, data path, serving loop, etc.) in the
 # host framework. Add sibling subpackages for substrates.
+#
+# Importing any core submodule populates the compression-pass registry
+# (core/registry.py) with the built-in passes: D/P/Q/E from core/passes.py
+# and the low-rank 'L' pass from core/lowrank.py.  Third-party passes
+# register themselves the same way lowrank does.
+from repro.core import passes as _passes          # noqa: F401  (registers DPQE)
+from repro.core import lowrank as _lowrank        # noqa: F401  (registers L)

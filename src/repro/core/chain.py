@@ -1,36 +1,120 @@
 """CompressionChain: apply passes in a given order (the paper's pipeline).
 
-``run_chain(family, cfg, 'DPQE', hps, trainer)`` trains the baseline, applies
-each pass with fine-tuning, and records (accuracy, BitOpsCR, CR) after every
+``Pipeline`` is the first-class chain API over the pass registry
+(core/registry.py):
+
+    Pipeline.from_sequence('DPLQE', hps).run(family, cfg, trainer)
+    Pipeline.auto(planner).run(...)        # order from pairwise experiments
+
+``from_sequence`` validates the sequence against the registry (unknown
+keys, duplicates) and resolves each pass's hyperparameters into its typed
+dataclass up front — an ``hps`` entry whose key is not in the sequence, or
+a misspelled hyperparameter name, raises instead of being silently ignored.
+``run`` trains the baseline (unless a shared one is passed), applies each
+pass with fine-tuning, and records (accuracy, BitOpsCR, CR) after every
 stage — the data behind the paper's Fig. 15 / Tables 1–4.
+
+Migration note: ``run_chain(family, cfg, 'DPQE', hps, trainer)`` is kept as
+a thin wrapper over ``Pipeline.from_sequence(...).run(...)`` and now
+accepts any registered key set (e.g. 'DPLQE' once core/lowrank.py — or a
+third-party pass — is registered).
 """
 from __future__ import annotations
 
+from dataclasses import dataclass
+from typing import Any
+
 import jax
 
-from repro.core.passes import PASSES, ChainState, Trainer, init_chain_state
+from repro.core import registry
+from repro.core.passes import ChainState, Trainer, init_chain_state
 
-OPTIMAL_SEQUENCE = 'DPQE'   # the paper's combinational sequence law
+OPTIMAL_SEQUENCE = 'DPQE'   # the paper's own 4-pass combinational law
+
+
+@dataclass(frozen=True)
+class Pipeline:
+    """A validated, hp-resolved sequence of registered compression passes."""
+    steps: tuple     # ((CompressionPass, typed hp), ...)
+
+    @classmethod
+    def from_sequence(cls, sequence: str, hps: dict | None = None, *,
+                      allow_repeats: bool = False) -> 'Pipeline':
+        """Build from a key string like 'DPLQE' and optional per-key hps.
+
+        ``hps`` maps pass key -> dict or typed hp dataclass.  Raises on
+        unknown pass keys, on hps entries for keys not in the sequence
+        (typo guard), and on duplicate keys unless ``allow_repeats=True``
+        (the repeat-compression experiments opt in deliberately).
+        """
+        hps = dict(hps or {})
+        seq = list(sequence)
+        if not seq:
+            raise ValueError('empty pass sequence')
+        dups = sorted({k for k in seq if seq.count(k) > 1})
+        if dups and not allow_repeats:
+            raise ValueError(
+                f'duplicate pass keys {dups} in sequence {sequence!r}; '
+                f'pass allow_repeats=True if the repetition is intended')
+        stray = sorted(set(hps) - set(seq))
+        if stray:
+            raise ValueError(
+                f'hps given for keys {stray} not in sequence {sequence!r} '
+                f'(registered passes: {registry.registered_keys()})')
+        steps = tuple((p, p.resolve_hp(hps.get(k)))
+                      for k in seq for p in (registry.get_pass(k),))
+        return cls(steps)
+
+    @classmethod
+    def auto(cls, planner, hps: dict | None = None) -> 'Pipeline':
+        """Order from an OrderPlanner's pairwise DAG (or a benchmark results
+        dict carrying 'topological_order')."""
+        if hasattr(planner, 'topological_order'):
+            seq = planner.topological_order()
+        else:
+            seq = planner['topological_order']
+        return cls.from_sequence(seq, hps)
+
+    @property
+    def sequence(self) -> str:
+        return ''.join(p.key for p, _ in self.steps)
+
+    def run(self, family, cfg, trainer: Trainer, *, key=None,
+            state: ChainState | None = None,
+            pretrain_steps=None) -> ChainState:
+        """Apply the passes in order, fine-tuning and recording metrics.
+
+        Returns the final ChainState; ``state.history`` holds per-stage
+        metrics.  Pass an existing baseline ``state`` to reuse one trained
+        original model across different sequences (how the paper compares
+        orders fairly).
+        """
+        if state is None:
+            state = init_chain_state(family, cfg, key or jax.random.key(0),
+                                     trainer, pretrain_steps=pretrain_steps)
+        for p, hp in self.steps:
+            state = p.fn(state, hp, trainer)     # hp already resolved
+            state.metrics(trainer, p.key)
+        return state
+
+    def export(self, state: ChainState, *, use_pallas=None) -> Any:
+        """Compile the finished chain for serving (core/export.py backend
+        registry picks the family's serving path)."""
+        from repro.core.export import export_chain
+        return export_chain(state, use_pallas=use_pallas)
 
 
 def run_chain(family, cfg, sequence: str, hps: dict, trainer: Trainer, *,
               key=None, state: ChainState | None = None,
-              pretrain_steps=None):
-    """Apply ``sequence`` (e.g. 'DPQE'). hps: {pass_key: hyperparam dict}.
+              pretrain_steps=None, allow_repeats: bool = False):
+    """Apply ``sequence`` (e.g. 'DPQE'). hps: {pass_key: hp dict/dataclass}.
 
-    Returns the final ChainState; ``state.history`` holds per-stage metrics.
-    Pass an existing baseline ``state`` to reuse one trained original model
-    across different sequences (how the paper compares orders fairly).
+    Thin wrapper over :class:`Pipeline` — see its docstrings for validation
+    and reuse semantics.
     """
-    if state is None:
-        state = init_chain_state(family, cfg, key or jax.random.key(0),
-                                 trainer, pretrain_steps=pretrain_steps)
-    for p in sequence:
-        if p not in PASSES:
-            raise KeyError(f'unknown pass {p!r} (have {sorted(PASSES)})')
-        state = PASSES[p].apply(state, hps.get(p, {}), trainer)
-        state.metrics(trainer, p)
-    return state
+    pipe = Pipeline.from_sequence(sequence, hps, allow_repeats=allow_repeats)
+    return pipe.run(family, cfg, trainer, key=key, state=state,
+                    pretrain_steps=pretrain_steps)
 
 
 def sweep_exit_thresholds(state: ChainState, trainer: Trainer, thresholds):
@@ -41,7 +125,7 @@ def sweep_exit_thresholds(state: ChainState, trainer: Trainer, thresholds):
     out = []
     for t in thresholds:
         acc, probs = fam.exit_stats(state.params, state.cfg, batches, t)
-        bops = fam.bitops(state.cfg, probs, state.prune_scale)
+        bops = fam.bitops(state.cfg, probs, state.mac_scale)
         out.append({'threshold': t, 'acc': acc,
                     'BitOpsCR': state.base_bitops / max(bops, 1)})
     return out

@@ -1,7 +1,13 @@
 """Export pass: compile a finished compression chain into an int8 serving
 function running on the Pallas kernels.
 
-The chain (D→P→Q→E, core/passes.py) ends with *fake-quant* params: every
+``export_chain`` routes through a per-family serving-backend registry
+(:func:`register_serving_backend`) — third-party families plug in serving
+the same way third-party passes plug into core/registry.py.  Low-rank
+factored layers (the 'L' pass) serve as two chained int8 kernel calls.
+
+The chain (e.g. D→P→L→Q→E over the registered passes, core/passes.py /
+core/lowrank.py) ends with *fake-quant* params: every
 forward still runs fp32 convs/matmuls and recomputes per-channel weight
 abs-max scales per call.  This module realizes the Q pass at inference:
 
@@ -56,15 +62,23 @@ def _serving_layers(use_pallas: bool, a_bits: int):
 
     Weight scales live in the params pytree (static); quant here is the
     cfg hook tuple, ignored for weights — that is the QAT/serving split.
+    Low-rank factored params ({'u','v'} pairs from family.factorize, each
+    half already int8+scale after quantize_params_for_serving) chain two
+    kernel calls, mirroring the QAT dispatch in models/cnn.py.
     """
     def conv_fn(p, x, *, stride=1, quant=(0, 0), groups=1):
         del quant
+        if 'u' in p:
+            h = conv_fn(p['u'], x, stride=stride, groups=groups)
+            return conv_fn(p['v'], h)
         return ops.quant_conv_nhwc(x, p['w_q'], p['scale'], p.get('b'),
                                    stride=stride, groups=groups,
                                    a_bits=a_bits, use_pallas=use_pallas)
 
     def fc_fn(p, x, *, quant=(0, 0)):
         del quant
+        if 'u' in p:
+            return fc_fn(p['v'], fc_fn(p['u'], x))
         y = ops.quant_dense(x, p['w_q'], p['scale'], a_bits=a_bits,
                             per_row=False, use_pallas=use_pallas)
         return y + p['b'] if 'b' in p else y
@@ -147,9 +161,44 @@ def export_lm(params, cfg) -> ServingModel:
     return ServingModel(cfg=cfg, params=qparams, fn=fn)
 
 
+# ----------------------------------------------------- serving backends
+
+# {family class: (state, use_pallas) -> ServingModel}.  Third-party model
+# families register here (mirroring the pass registry in core/registry.py)
+# instead of core growing isinstance branches; lookup walks the MRO so
+# subclassed families inherit their base family's backend.
+_SERVING_BACKENDS: dict[type, Callable] = {}
+
+
+def register_serving_backend(family_cls: type, backend: Callable) -> None:
+    _SERVING_BACKENDS[family_cls] = backend
+
+
+def serving_backend_for(family) -> Callable:
+    for cls in type(family).__mro__:
+        if cls in _SERVING_BACKENDS:
+            return _SERVING_BACKENDS[cls]
+    raise KeyError(
+        f'no serving backend registered for family {type(family).__name__} '
+        f'(registered: {sorted(c.__name__ for c in _SERVING_BACKENDS)}); '
+        f'call export.register_serving_backend(FamilyCls, backend)')
+
+
 def export_chain(state, *, use_pallas=None) -> ServingModel:
-    """Export a finished ChainState (core/passes.py) for serving."""
-    from repro.core.family import CNNFamily
-    if isinstance(state.family, CNNFamily):
-        return export_cnn(state.params, state.cfg, use_pallas=use_pallas)
-    return export_lm(state.params, state.cfg)
+    """Export a finished ChainState for serving via the family's registered
+    backend (old behavior — an isinstance(CNNFamily) branch — is now an
+    open registry; see register_serving_backend)."""
+    return serving_backend_for(state.family)(state, use_pallas)
+
+
+def _register_builtin_backends():
+    from repro.core.family import CNNFamily, LMFamily
+    register_serving_backend(
+        CNNFamily, lambda state, use_pallas: export_cnn(
+            state.params, state.cfg, use_pallas=use_pallas))
+    register_serving_backend(
+        LMFamily, lambda state, use_pallas: export_lm(state.params,
+                                                      state.cfg))
+
+
+_register_builtin_backends()

@@ -1,9 +1,10 @@
 """Family adapters: uniform Compressible interface over CNNs and LMs.
 
-The compression passes (D/P/Q/E) are family-agnostic; everything
-model-specific — loss, physical structured pruning (gather to smaller dense
-shapes, the TPU-friendly realization of the paper's channel pruning),
-student shrinking, exit heads, BitOps — lives here.
+The compression passes (the registered D/P/Q/E/L and any third-party pass,
+see core/registry.py) are family-agnostic; everything model-specific —
+loss, physical structured pruning (gather to smaller dense shapes, the
+TPU-friendly realization of the paper's channel pruning), student
+shrinking, low-rank SVD factorization, exit heads, BitOps — lives here.
 """
 from __future__ import annotations
 
@@ -19,6 +20,55 @@ from repro.core import bitops as bo
 from repro.models import cnn as cnn_lib
 from repro.models import transformer as tfm
 from repro.models.layers import init_norm, init_dense, dense, rms_norm, unembed, softcap
+
+
+# ----------------------------------------------------- low-rank SVD helpers
+
+
+def _svd_split(m, energy, min_rank):
+    """Rank-truncated balanced SVD split of a (din, dout) matrix.
+
+    Returns (u (din, r), v (r, dout)) with the smallest r keeping
+    ``energy`` of the spectral energy (floored at min_rank), or None when
+    no rank saves MACs (r * (din + dout) >= din * dout) — the factorize
+    hooks skip such weights rather than inflate them.
+    """
+    m = np.asarray(m, np.float32)
+    din, dout = m.shape
+    U, S, Vt = np.linalg.svd(m, full_matrices=False)
+    tot = float(np.sum(S ** 2))
+    if tot <= 0.0:
+        return None
+    r = int(np.searchsorted(np.cumsum(S ** 2), energy * tot) + 1)
+    r = min(max(r, min_rank), len(S))
+    if r * (din + dout) >= din * dout:
+        return None
+    s = np.sqrt(S[:r])
+    return U[:, :r] * s, s[:, None] * Vt[:r]
+
+
+def _linear_cost(tree) -> float:
+    """MAC-proportional weight volume: total size of >=2-D leaves (matmul /
+    conv weights; 1-D biases and norm params are free)."""
+    return float(sum(x.size for x in jax.tree_util.tree_leaves(tree)
+                     if hasattr(x, 'ndim') and x.ndim >= 2))
+
+
+def _any_factored(tree) -> bool:
+    """True if any weight in the pytree is a low-rank {'u','v'} pair.
+
+    Factorization is per-weight (only where a rank saves MACs), so a model
+    can be *partially* factored — the prune guards must walk the whole
+    tree, not sample one weight per block.
+    """
+    if isinstance(tree, dict):
+        if 'u' in tree and 'v' in tree:
+            return True
+        return any(_any_factored(v) for v in tree.values())
+    if isinstance(tree, (list, tuple)):
+        return any(_any_factored(v) for v in tree)
+    return False
+
 
 # ============================================================== CNN family
 
@@ -93,6 +143,11 @@ class CNNFamily:
     # ----- pruning (physical channel shrink)
     def prune(self, params, cfg, ratio):
         """Prune inner conv channels by L2 importance; returns (params, cfg)."""
+        if _any_factored(params):
+            raise ValueError(
+                'cannot channel-prune a low-rank-factored CNN: apply P '
+                'before L (the sequence law orders neuron-granularity '
+                'before sub-neuron)')
         params = jax.tree.map(lambda x: x, params)   # shallow copy
 
         def topk_idx(w, keep):                        # w: (..., C) importance
@@ -157,20 +212,68 @@ class CNNFamily:
             return 1.0                                # already in cfg widths
         return 1.0 - ratio                            # inner convs dominate
 
+    # ----- low-rank factorization (the 'L' pass's family hook)
+    def factorize(self, params, cfg, *, energy=0.95, min_rank=4):
+        """SVD-split stage convs and the head fc; returns (params, cfg,
+        mac_scale).
+
+        Each conv w (KH,KW,CIN,COUT) flattens to (KH*KW*CIN, COUT) and, when
+        a rank r keeping ``energy`` of the spectral energy saves MACs,
+        becomes a spatial conv to r channels ('u') chained with a 1x1 conv
+        back to COUT ('v') — the forward dispatch lives in models/cnn.py.
+        Depthwise convs (grouped; no shared input mixing to factor) and the
+        3-channel stem are skipped.  ``mac_scale`` is the stage weight-volume
+        ratio — the cost-model multiplier for ``bitops`` (head savings are
+        physical in storage but not charged to BitOps: the model scales
+        stage MACs only, like pruning).
+        """
+        params = jax.tree.map(lambda x: x, params)   # shallow copy
+        old_cost = _linear_cost(params['stages'])
+
+        def factor_conv(p):
+            kh, kw, cin, cout = p['w'].shape
+            uv = _svd_split(np.asarray(p['w']).reshape(kh * kw * cin, cout),
+                            energy, min_rank)
+            if uv is None:
+                return p
+            u, v = uv
+            r = u.shape[-1]
+            return {'u': {'w': jnp.asarray(u.reshape(kh, kw, cin, r)),
+                          'b': jnp.zeros((r,), p['b'].dtype)},
+                    'v': {'w': jnp.asarray(v.reshape(1, 1, r, cout)),
+                          'b': p['b']}}
+
+        for blocks in params['stages']:
+            for blk in blocks:
+                for k, p in list(blk.items()):
+                    if (isinstance(p, dict) and 'w' in p
+                            and getattr(p['w'], 'ndim', 0) == 4
+                            and k != 'dw'):          # depthwise: grouped
+                        blk[k] = factor_conv(p)
+        uv = _svd_split(params['head']['w'], energy, min_rank)
+        if uv is not None:
+            u, v = uv
+            params['head'] = {'u': {'w': jnp.asarray(u)},
+                              'v': {'w': jnp.asarray(v),
+                                    'b': params['head']['b']}}
+        scale = _linear_cost(params['stages']) / max(old_cost, 1.0)
+        return params, cfg, scale
+
     # ----- early exit
     def add_exits(self, key, params, cfg, stages):
         cfg = cfg.replace(exit_stages=tuple(stages))
         params = dict(params)
         params['exits'] = {}
         for s in stages:
-            # read the true (possibly pruned) feature dim off the last block
+            # read the true (possibly pruned/factored) feature dim off the
+            # last block
             blk = params['stages'][s][-1]
             if cfg.kind == 'mobilenet':
-                dim = blk['project']['w'].shape[-1]
+                dim = cnn_lib.out_channels(blk['project'])
             elif cfg.kind == 'resnet':
-                dim = blk['conv2']['w'].shape[-1]
+                dim = cnn_lib.out_channels(blk['conv2'])
             else:
-                dim = blk['conv1']['w'].shape[-1]
+                dim = cnn_lib.out_channels(blk['conv1'])
             params['exits'][str(s)] = cnn_lib._fc_init(
                 jax.random.fold_in(key, s), dim, cfg.num_classes)
         return params, cfg
@@ -198,15 +301,17 @@ class CNNFamily:
         return hit / tot, exit_probs
 
     # ----- costs
-    def bitops(self, cfg, exit_probs=None, prune_scale=1.0):
+    def bitops(self, cfg, exit_probs=None, mac_scale=1.0):
+        """Expected BitOps; ``mac_scale`` multiplies stage MACs (pruning ×
+        low-rank — ChainState.mac_scale combines them)."""
         stem, stages, head, exits = bo.cnn_stage_macs(cfg, self.image)
         w_b = cfg.w_bits or bo.FP_BITS
         a_b = cfg.a_bits or bo.FP_BITS
         if not exit_probs:
-            return (stem + sum(stages) * prune_scale + head) * w_b * a_b
+            return (stem + sum(stages) * mac_scale + head) * w_b * a_b
         total, p_rem, run = 0.0, 1.0, float(stem)
         for s in range(len(stages)):
-            run += stages[s] * prune_scale
+            run += stages[s] * mac_scale
             if s in exit_probs:
                 run += exits[s]
                 total += p_rem * exit_probs[s] * run
@@ -285,6 +390,9 @@ class LMFamily:
             return self._prune_experts(params, cfg, ratio)
         if not cfg.d_ff:
             return params, cfg                       # ssm: P inapplicable
+        if _any_factored(params):
+            raise ValueError('cannot channel-prune low-rank-factored MLPs: '
+                             'apply P before L')
         keep = max(8, int(cfg.d_ff * (1 - ratio)))
 
         def prune_mlp(mp, stacked):
@@ -347,6 +455,64 @@ class LMFamily:
                         if 'moe' in lp else lp for lp in params[grp]]
         return new, cfg.replace(n_experts=keep)
 
+    # ----- low-rank factorization (the 'L' pass's family hook)
+    def factorize(self, params, cfg, *, energy=0.95, min_rank=8):
+        """SVD-split dense MLP weights (wi/wg/wo); returns (params, cfg,
+        mac_scale).
+
+        Unstacked layers (prefix/tail/encoder) factor per-weight; the
+        scan-stacked block group (G, d, f) factors with one shared rank
+        (max over groups) so the stacked pytree stays rectangular — the
+        per-layer slices dispatch through ``layers.dense``'s u/v path.
+        MoE expert tensors and attention projections are left alone.
+        ``mac_scale`` is the whole-tree weight-volume ratio, a
+        MAC-proportional proxy applied multiplicatively by ``bitops``
+        (attention-score MACs make it slightly conservative).
+        """
+        old_cost = _linear_cost(params)
+
+        def factor_w(wp):                            # {'w': (d,f)} -> u/v
+            uv = _svd_split(wp['w'], energy, min_rank)
+            if uv is None:
+                return wp
+            u, v = uv
+            return {'u': {'w': jnp.asarray(u)}, 'v': {'w': jnp.asarray(v)}}
+
+        def factor_stacked(wp):                      # {'w': (G,d,f)}
+            w = np.asarray(wp['w'], np.float32)
+            G, d, f = w.shape
+            U, S, Vt = np.linalg.svd(w, full_matrices=False)
+            tot = np.sum(S ** 2, axis=-1, keepdims=True)
+            if not np.all(tot > 0):
+                return wp
+            cum = np.cumsum(S ** 2, axis=-1)
+            ranks = (cum < energy * tot).sum(axis=-1) + 1   # per-group rank
+            r = int(min(max(int(ranks.max()), min_rank), S.shape[-1]))
+            if r * (d + f) >= d * f:
+                return wp
+            s = np.sqrt(S[:, :r])
+            u = U[:, :, :r] * s[:, None, :]
+            v = s[:, :, None] * Vt[:, :r, :]
+            return {'u': {'w': jnp.asarray(u)}, 'v': {'w': jnp.asarray(v)}}
+
+        def factor_mlp(mp, stacked):
+            fn = factor_stacked if stacked else factor_w
+            return {k: fn(wp) if k in ('wi', 'wg', 'wo') else wp
+                    for k, wp in mp.items()}
+
+        new = dict(params)
+        for grp in ('prefix', 'blocks', 'tail'):
+            new[grp] = [dict(lp, mlp=factor_mlp(lp['mlp'], grp == 'blocks'))
+                        if 'mlp' in lp else lp for lp in params[grp]]
+        if 'encoder' in params:
+            new['encoder'] = dict(
+                params['encoder'],
+                layers=[dict(lp, mlp=factor_mlp(lp['mlp'], False))
+                        if 'mlp' in lp else lp
+                        for lp in params['encoder']['layers']])
+        scale = _linear_cost(new) / max(old_cost, 1.0)
+        return new, cfg, scale
+
     # ----- early exit: heads after scan groups
     def add_exits(self, key, params, cfg, groups):
         params = dict(params)
@@ -395,14 +561,16 @@ class LMFamily:
         return hit / tot, {g: c / max(n, 1) for g, (c, n) in probs.items()}
 
     # ----- costs
-    def bitops(self, cfg, exit_probs=None, prune_scale=1.0):
+    def bitops(self, cfg, exit_probs=None, mac_scale=1.0):
         # exit indices are scan-group indices -> convert to layer indices
         ep = None
         if exit_probs:
             P = len(cfg.block_pattern)
             ep = {cfg.first_dense_layers + (g + 1) * P - 1: p
                   for g, p in exit_probs.items()}
-        return bo.lm_bitops(cfg, self.seq, exit_probs=ep)
+        # pruning is physical in cfg (d_ff / n_experts); mac_scale carries
+        # the low-rank weight-volume ratio, which cfg cannot express
+        return bo.lm_bitops(cfg, self.seq, exit_probs=ep) * mac_scale
 
     def storage_bits(self, params, cfg):
         return bo.param_storage_bits(params, cfg.w_bits)

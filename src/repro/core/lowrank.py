@@ -1,0 +1,60 @@
+"""Low-rank factorization pass 'L' — the registry's proof of openness.
+
+SVD-splits conv / fc weights into a rank-``r`` pair (a spatial conv down to
+``r`` channels followed by a 1x1 conv back up; for fc, two chained
+matmuls), with ``r`` chosen per weight as the smallest rank keeping
+``energy`` of the spectral energy, and factored only where it *saves* MACs
+(``r * (kh*kw*cin + cout) < kh*kw*cin*cout``).  A fine-tune at lr/10
+follows, like every static pass.  The heavy lifting is delegated to the
+family's ``factorize`` hook (core/family.py), which also reports the
+stage-MAC multiplier for the BitOps cost model; storage is physical (the
+factored pytree simply holds fewer parameters).
+
+Classification on the paper's axes: static (the factored network is fixed
+after the pass) and sub-neuron (it rewrites the weight matrices inside a
+layer, like quantization; cf. Carreira-Perpinan & Idelbayev's "combining
+compressions", which chains low-rank with P and Q).  'L' and 'Q' share the
+(static, sub-neuron) class, so their relative order is outside the paper's
+theory; the registry breaks the tie by key (L before Q — factorize a
+continuous weight matrix, then discretize it), giving the 5-pass law
+D→P→L→Q→E, and an empirical pairwise L/Q edge overrides the tiebreak.
+
+This module deliberately registers through the public API only — it is the
+template for out-of-tree passes (no edits to chain.py / planner.py):
+
+    from repro.core import registry
+    registry.register(registry.CompressionPass(
+        'L', 'low-rank', 'static', 'sub-neuron', LowRankHP, _lowrank))
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, replace
+
+import jax
+
+from repro.core import registry
+from repro.core.passes import ChainState, Trainer
+
+
+@dataclass(frozen=True)
+class LowRankHP:
+    energy: float = 0.95     # fraction of spectral energy the rank must keep
+    min_rank: int = 4        # floor on the kept rank
+
+
+def _lowrank(state: ChainState, hp: LowRankHP, trainer: Trainer) -> ChainState:
+    fam = state.family
+    params, cfg, scale = fam.factorize(state.params, state.cfg,
+                                       energy=hp.energy,
+                                       min_rank=hp.min_rank)
+    params, _ = trainer.fit(fam, cfg, params, lr=trainer.lr / 10)
+    # factorization rewrites layer topology: dynamic exit stats (if any)
+    # are stale, like after P
+    return replace(state, cfg=cfg, params=params,
+                   lowrank_scale=state.lowrank_scale * scale,
+                   key=jax.random.fold_in(state.key, 7),
+                   exit_probs=None, dyn_accuracy=None)
+
+
+registry.register(registry.CompressionPass(
+    'L', 'low-rank', 'static', 'sub-neuron', LowRankHP, _lowrank))

@@ -1,18 +1,31 @@
 """Compression passes as standard building blocks (the paper's Fig. 1).
 
-Each pass has static metadata (kind: static/dynamic, granularity:
+Each pass declares static metadata (kind: static/dynamic, granularity:
 architecture/neuron/sub-neuron — the two axes the paper's sequence law is
-stated in) and an ``apply(state, hp, trainer)`` that transforms a ChainState.
-Fine-tuning after every pass uses 1/10 of the initial LR, matching the
-paper's protocol.
+stated in), a *typed* hyperparameter dataclass, and a transform
+``fn(state, hp, trainer) -> state``; all of it is packaged as a
+:class:`repro.core.registry.CompressionPass` and registered in the global
+registry.  Fine-tuning after every pass uses 1/10 of the initial LR,
+matching the paper's protocol.
+
+Migration note (old API → registry): ``PASSES`` used to be a closed module
+dict of exactly D/P/Q/E.  It is now a live read-only *view* of
+``core.registry`` — existing ``PASSES['Q'].apply(state, {...}, trainer)``
+call sites keep working (dict hps are coerced to the typed dataclass), and
+newly registered passes (e.g. low-rank 'L' from core/lowrank.py, or any
+third-party pass) appear in it automatically.  New code should use
+``registry.get_pass`` / ``chain.Pipeline`` directly.
 """
 from __future__ import annotations
 
+from collections.abc import Mapping
 from dataclasses import dataclass, field, replace
 from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
+
+from repro.core import registry
 
 
 # ------------------------------------------------------------------ trainer
@@ -81,15 +94,22 @@ class ChainState:
     key: Any
     base_bitops: float = 0.0
     base_bits: float = 0.0
-    prune_scale: float = 1.0
+    prune_scale: float = 1.0       # stage-MAC multiplier from pruning
+    lowrank_scale: float = 1.0     # stage-MAC multiplier from factorization
     exit_probs: dict | None = None
+    exit_threshold: float | None = None   # E's operating point, reused by Q
     dyn_accuracy: float | None = None
     history: list = field(default_factory=list)
+
+    @property
+    def mac_scale(self) -> float:
+        """Combined stage-MAC multiplier for the BitOps cost model."""
+        return self.prune_scale * self.lowrank_scale
 
     def metrics(self, trainer, label):
         acc = (self.dyn_accuracy if self.dyn_accuracy is not None
                else trainer.evaluate(self.family, self.cfg, self.params))
-        bops = self.family.bitops(self.cfg, self.exit_probs, self.prune_scale)
+        bops = self.family.bitops(self.cfg, self.exit_probs, self.mac_scale)
         bits = self.family.storage_bits(self.params, self.cfg)
         rec = {'pass': label, 'acc': acc,
                'BitOpsCR': self.base_bitops / max(bops, 1),
@@ -110,27 +130,43 @@ def init_chain_state(family, cfg, key, trainer, *, pretrain_steps=None):
     return st
 
 
-# ------------------------------------------------------------------- passes
+# --------------------------------------------------- typed hyperparameters
 
 
 @dataclass(frozen=True)
-class PassInfo:
-    key: str
-    name: str
-    kind: str            # static | dynamic
-    granularity: str     # architecture | neuron | sub-neuron
-    apply: Callable      # (state, hp, trainer) -> state
+class DistillHP:
+    factor: float = 0.5      # student size factor (depth or width)
+    temp: float = 2.0        # KD temperature
+    alpha: float = 0.5       # KL weight vs. CE
 
 
-def _distill(state: ChainState, hp, trainer: Trainer) -> ChainState:
-    factor = hp.get('factor', 0.5)
+@dataclass(frozen=True)
+class PruneHP:
+    ratio: float = 0.3       # fraction of channels removed
+
+
+@dataclass(frozen=True)
+class QuantHP:
+    w_bits: int = 8
+    a_bits: int = 8
+
+
+@dataclass(frozen=True)
+class EarlyExitHP:
+    stages: tuple | None = None    # None = family.default_exit_points
+    threshold: float = 0.9         # softmax-confidence exit threshold
+
+
+# ------------------------------------------------------------------- passes
+
+
+def _distill(state: ChainState, hp: DistillHP, trainer: Trainer) -> ChainState:
     # T=2, alpha=0.5 defaults: at T=4 the T^2-scaled KL dominates the
     # clipped gradient and stalls student training (measured; see
     # EXPERIMENTS.md §Paper-results tuning note)
-    temp = hp.get('temp', 2.0)
-    alpha = hp.get('alpha', 0.5)
+    temp, alpha = hp.temp, hp.alpha
     fam, t_cfg, t_params = state.family, state.cfg, state.params
-    s_cfg = fam.shrink(t_cfg, factor)
+    s_cfg = fam.shrink(t_cfg, hp.factor)
     s_params = fam.init(jax.random.fold_in(state.key, 1), s_cfg)
 
     def kd_loss(p, cfg, batch):
@@ -150,33 +186,35 @@ def _distill(state: ChainState, hp, trainer: Trainer) -> ChainState:
                                   state.key, (), 0, 2**31 - 1)))
     new = replace(state, cfg=s_cfg, params=s_params,
                   key=jax.random.fold_in(state.key, 2),
-                  exit_probs=None, dyn_accuracy=None, prune_scale=1.0)
+                  exit_probs=None, dyn_accuracy=None, prune_scale=1.0,
+                  lowrank_scale=1.0)
     return new
 
 
-def _prune(state: ChainState, hp, trainer: Trainer) -> ChainState:
-    ratio = hp.get('ratio', 0.3)
+def _prune(state: ChainState, hp: PruneHP, trainer: Trainer) -> ChainState:
     fam = state.family
-    params, cfg = fam.prune(state.params, state.cfg, ratio)
+    params, cfg = fam.prune(state.params, state.cfg, hp.ratio)
     params, _ = trainer.fit(fam, cfg, params, lr=trainer.lr / 10)
     scale = state.prune_scale
     if hasattr(fam, 'pruned_bitops_scale'):
-        scale *= fam.pruned_bitops_scale(ratio, cfg)
+        scale *= fam.pruned_bitops_scale(hp.ratio, cfg)
     return replace(state, cfg=cfg, params=params, prune_scale=scale,
                    key=jax.random.fold_in(state.key, 3),
                    exit_probs=None, dyn_accuracy=None)
 
 
-def _quantize(state: ChainState, hp, trainer: Trainer) -> ChainState:
-    cfg = state.cfg.replace(w_bits=hp.get('w_bits', 8),
-                            a_bits=hp.get('a_bits', 8))
+def _quantize(state: ChainState, hp: QuantHP, trainer: Trainer) -> ChainState:
+    cfg = state.cfg.replace(w_bits=hp.w_bits, a_bits=hp.a_bits)
     params, _ = trainer.fit(state.family, cfg, state.params,
                             lr=trainer.lr / 10)
     new = replace(state, cfg=cfg, params=params,
                   key=jax.random.fold_in(state.key, 4))
     if new.exit_probs is not None:
-        # re-measure dynamic stats under quantized compute
-        thr = hp.get('threshold', 0.9)
+        # re-measure dynamic stats under quantized compute, at the SAME
+        # operating point E established (state.exit_threshold) — Q has no
+        # threshold hp of its own, so it cannot silently move it
+        thr = (state.exit_threshold if state.exit_threshold is not None
+               else 0.9)
         acc, probs = state.family.exit_stats(
             params, cfg, state.family.eval_batches(trainer.eval_n,
                                                    trainer.eval_batch), thr)
@@ -184,12 +222,12 @@ def _quantize(state: ChainState, hp, trainer: Trainer) -> ChainState:
     return new
 
 
-def _early_exit(state: ChainState, hp, trainer: Trainer) -> ChainState:
+def _early_exit(state: ChainState, hp: EarlyExitHP,
+                trainer: Trainer) -> ChainState:
     fam = state.family
-    stages = hp.get('stages')
+    stages = hp.stages
     if stages is None:
         stages = fam.default_exit_points(state.cfg)
-    threshold = hp.get('threshold', 0.9)
     params, cfg = fam.add_exits(jax.random.fold_in(state.key, 5),
                                 state.params, state.cfg, stages)
     # paper insight (Sec 3.1.3/3.1.6): exit heads learn from the *student's
@@ -200,14 +238,37 @@ def _early_exit(state: ChainState, hp, trainer: Trainer) -> ChainState:
                             train_keys={exit_key})
     acc, probs = fam.exit_stats(
         params, cfg, fam.eval_batches(trainer.eval_n, trainer.eval_batch),
-        threshold)
+        hp.threshold)
     return replace(state, cfg=cfg, params=params, exit_probs=probs,
+                   exit_threshold=hp.threshold,
                    dyn_accuracy=acc, key=jax.random.fold_in(state.key, 6))
 
 
-PASSES = {
-    'D': PassInfo('D', 'distillation', 'static', 'architecture', _distill),
-    'P': PassInfo('P', 'pruning', 'static', 'neuron', _prune),
-    'Q': PassInfo('Q', 'quantization', 'static', 'sub-neuron', _quantize),
-    'E': PassInfo('E', 'early-exit', 'dynamic', 'architecture', _early_exit),
-}
+# -------------------------------------------------------------- registration
+
+
+registry.register(registry.CompressionPass(
+    'D', 'distillation', 'static', 'architecture', DistillHP, _distill))
+registry.register(registry.CompressionPass(
+    'P', 'pruning', 'static', 'neuron', PruneHP, _prune))
+registry.register(registry.CompressionPass(
+    'Q', 'quantization', 'static', 'sub-neuron', QuantHP, _quantize))
+registry.register(registry.CompressionPass(
+    'E', 'early-exit', 'dynamic', 'architecture', EarlyExitHP, _early_exit))
+
+
+class _RegistryView(Mapping):
+    """Read-only mapping view of the live registry (old ``PASSES`` API)."""
+
+    def __getitem__(self, key):
+        return registry.get_pass(key)
+
+    def __iter__(self):
+        return iter(registry.registered_keys())
+
+    def __len__(self):
+        return len(registry.registered_keys())
+
+
+#: Deprecated alias — a live view of ``core.registry`` (see module docstring).
+PASSES = _RegistryView()

@@ -7,23 +7,36 @@ into the combinational sequence law.  ``theoretical_order()`` returns the
 sequence implied by the paper's static→dynamic / large→small-granularity
 principles without running anything — the experiments in
 benchmarks/pairwise_order.py validate that the empirical DAG matches it.
+
+All of it is generic over the pass registry (core/registry.py): the
+planner plans whatever key set is registered — the paper's four, the five
+with low-rank 'L', or any third-party extension — with no 'DPQE'
+assumption.  Passes sharing a (kind, granularity) class rank by key
+(deterministic tiebreak; the theory does not order same-class passes), and
+an empirical pairwise edge always overrides the tiebreak.
 """
 from __future__ import annotations
 
 import itertools
 from dataclasses import dataclass, field
 
-from repro.core.passes import PASSES
-
-_GRAN_RANK = {'architecture': 0, 'neuron': 1, 'sub-neuron': 2}
-_KIND_RANK = {'static': 0, 'dynamic': 1}
+from repro.core import registry
 
 
-def theoretical_order(keys='DPQE') -> str:
-    """Static before dynamic; within static, large→small granularity."""
-    return ''.join(sorted(
-        keys, key=lambda k: (_KIND_RANK[PASSES[k].kind],
-                             _GRAN_RANK[PASSES[k].granularity])))
+def pass_rank(key: str) -> tuple:
+    """(kind, granularity, key) sort rank of a registered pass."""
+    return registry.get_pass(key).rank
+
+
+def theoretical_order(keys=None) -> str:
+    """Static before dynamic; within static, large→small granularity.
+
+    ``keys=None`` plans every registered pass.  Same-class passes order by
+    key — deterministic, theory-agnostic (see registry docstring).
+    """
+    if keys is None:
+        keys = registry.registered_keys()
+    return ''.join(sorted(keys, key=pass_rank))
 
 
 # ------------------------------------------------------------ frontier logic
@@ -67,12 +80,24 @@ def frontier_score(samples, cr_range=None):
     return area / (hi - lo)
 
 
-def compare_orders(samples_ab, samples_ba):
-    """Decide the winning order between two sample sets on common support."""
+def compare_orders(samples_ab, samples_ba, a: str | None = None,
+                   b: str | None = None):
+    """Decide the winning order between two sample sets on common support.
+
+    Exact score ties are NOT experimental evidence for either order: with
+    the pass keys given, a tie falls back to the theoretical
+    (kind, granularity) principle; without them it stays 'AB' for backward
+    compatibility.  Callers should record tied edges with ``margin=0.0``
+    (= |score difference|) so ``OrderPlanner.resolve_cycles`` drops them
+    first.
+    """
     crs = [c for _, c in samples_ab + samples_ba if c > 0]
     rng = (min(crs), max(crs)) if crs else None
     sa = frontier_score(samples_ab, rng)
     sb = frontier_score(samples_ba, rng)
+    if sa == sb and a is not None and b is not None:
+        winner = 'AB' if pass_rank(a) <= pass_rank(b) else 'BA'
+        return winner, sa, sb
     return ('AB' if sa >= sb else 'BA'), sa, sb
 
 
@@ -81,9 +106,19 @@ def compare_orders(samples_ab, samples_ba):
 
 @dataclass
 class OrderPlanner:
-    keys: str = 'DPQE'
+    """Pairwise-edge collector + topological sort over a key set.
+
+    ``keys=None`` plans all registered passes at construction time.
+    """
+    keys: str | None = None
     edges: set = field(default_factory=set)      # (first, later)
     margins: dict = field(default_factory=dict)  # edge -> |scoreA - scoreB|
+
+    def __post_init__(self):
+        if self.keys is None:
+            self.keys = ''.join(registry.registered_keys())
+        for k in self.keys:
+            registry.get_pass(k)                 # fail fast on unknown keys
 
     def add_pairwise(self, a: str, b: str, winner: str, margin: float = 1.0):
         e = (a, b) if winner == 'AB' else (b, a)
@@ -94,7 +129,8 @@ class OrderPlanner:
         """Drop weakest-margin edges until acyclic (reduced-budget pairwise
         experiments can produce weak flipped edges; the paper's full-budget
         DAG is acyclic — this recovers an order while reporting what was
-        dropped)."""
+        dropped).  Zero-margin (tied) edges go first; equal margins break
+        deterministically by edge."""
         dropped = []
         while True:
             try:
@@ -102,7 +138,7 @@ class OrderPlanner:
                 return dropped
             except ValueError:
                 weakest = min(self.edges, key=lambda e:
-                              self.margins.get(e, 0.0))
+                              (self.margins.get(e, 0.0), e))
                 self.edges.discard(weakest)
                 dropped.append(weakest)
 
@@ -121,8 +157,7 @@ class OrderPlanner:
             # the paper's hypothesis is a unique sorting; break any tie by
             # the theoretical principles (and a full pairwise sweep leaves
             # no ties anyway)
-            ready.sort(key=lambda k: (_KIND_RANK[PASSES[k].kind],
-                                      _GRAN_RANK[PASSES[k].granularity]))
+            ready.sort(key=pass_rank)
             n = ready.pop(0)
             order.append(n)
             for a, b in list(edges):

@@ -32,7 +32,14 @@ def conv(p, x, *, stride=1, quant=(0, 0), groups=1):
     This is the *training* path.  The serving path (core/export.py) swaps
     this out via cnn_forward's ``conv_fn`` for an int8 Pallas conv with
     static, export-time weight scales.
+
+    A low-rank-factored conv (core/family.py factorize: {'u': spatial conv
+    to rank r, 'v': 1x1 conv back up}) chains the two sub-convs; each gets
+    its own fake-quant hooks, matching the exported int8 path.
     """
+    if 'u' in p:
+        h = conv(p['u'], x, stride=stride, quant=quant, groups=groups)
+        return conv(p['v'], h, quant=quant)
     w_bits, a_bits = quant
     w = p['w']
     if w_bits:
@@ -47,7 +54,10 @@ def conv(p, x, *, stride=1, quant=(0, 0), groups=1):
 
 
 def out_channels(p) -> int:
-    """Output channels of a conv/fc param dict (fp32 'w' or int8 'w_q')."""
+    """Output channels of a conv/fc param dict (fp32 'w', int8 'w_q', or
+    low-rank factored {'u','v'} — the 'v' half carries the output dim)."""
+    if 'v' in p and 'w' not in p and 'w_q' not in p:
+        return out_channels(p['v'])
     return (p['w'] if 'w' in p else p['w_q']).shape[-1]
 
 
@@ -73,13 +83,16 @@ def _fc_init(key, din, dout, dtype=jnp.float32):
 
 
 def fc(p, x, *, quant=(0, 0)):
+    if 'u' in p:                   # low-rank factored: two chained matmuls
+        return fc(p['v'], fc(p['u'], x, quant=quant), quant=quant)
     w_bits, a_bits = quant
     w = p['w']
     if w_bits:
         w = fake_quant_weight(w, w_bits, axis=-1)
     if a_bits:
         x = fake_quant_act(x, a_bits)
-    return x @ w.astype(x.dtype) + p['b'].astype(x.dtype)
+    y = x @ w.astype(x.dtype)
+    return y + p['b'].astype(x.dtype) if 'b' in p else y
 
 
 # ------------------------------------------------------------------------ init

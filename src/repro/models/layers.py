@@ -39,8 +39,12 @@ def dense(p, x, *, quant=(0, 0)):
 
     Also accepts the int8 serving form {'w_q': int8, 'scale': (out,)} from
     core.quantization.quantize_params_for_serving — weights stream from HBM
-    as int8 and dequantize in-register (Pallas quant_matmul on TPU).
+    as int8 and dequantize in-register (Pallas quant_matmul on TPU) — and
+    the low-rank factored form {'u', 'v'} from core/family.py factorize
+    (two chained matmuls; composes with either weight representation).
     """
+    if 'u' in p and 'v' in p:
+        return dense(p['v'], dense(p['u'], x, quant=quant), quant=quant)
     w_bits, a_bits = quant
     if 'w_q' in p:
         w = p['w_q'].astype(x.dtype) * p['scale'].astype(x.dtype)

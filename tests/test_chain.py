@@ -28,8 +28,13 @@ def base_state(cnn_family):
 
 
 def test_theoretical_order_is_dpqe():
-    assert theoretical_order() == 'DPQE'
+    assert theoretical_order('DPQE') == 'DPQE'
     assert OPTIMAL_SEQUENCE == 'DPQE'
+    # the default plans the full registry: the built-in five passes give
+    # the N-pass law D->P->L->Q->E (L ties Q on (static, sub-neuron) and
+    # orders before it deterministically)
+    assert theoretical_order() == 'DPLQE'
+    assert theoretical_order('EQLPD') == 'DPLQE'   # input order irrelevant
 
 
 def test_planner_topological_sort_unique():

@@ -121,6 +121,54 @@ def test_export_chain_dispatch():
     assert out.shape == (2, cfg.num_classes)
 
 
+# --------------------------------------------------- low-rank factored path
+
+
+def _with_factored_exits(base, energy=0.6):
+    fam = CNNFamily(SyntheticImages())
+    params = fam.init(jax.random.key(0), base)
+    params, _, scale = fam.factorize(params, base, energy=energy, min_rank=2)
+    assert scale < 1.0                    # something actually factored
+    params, cfg = fam.add_exits(jax.random.key(2), params, base,
+                                fam.default_exit_points(base))
+    return fam, params, cfg.replace(w_bits=8, a_bits=8)
+
+
+@pytest.mark.parametrize('kind', ['resnet', 'vgg'])
+def test_export_factored_matches_fake_quant_oracle(kind):
+    """A chain containing 'L' (low-rank u/v conv pairs + factored head fc)
+    exports to int8 serving that matches the fake-quant forward — the
+    factored dispatch is identical in QAT (models/cnn.py) and serving
+    (core/export.py), incl. exit heads hung off factored blocks."""
+    _, params, cfg = _with_factored_exits(CONFIGS[kind])
+    x = jax.random.normal(jax.random.key(1), (8, 32, 32, 3))
+    oracle, oracle_exits = jax.jit(
+        lambda p, x: cnn_forward(p, cfg, x, collect_exits=True))(params, x)
+    model = export_cnn(params, cfg)
+    served, served_exits = model.fn_exits(model.params, x)
+    scale = float(jnp.max(jnp.abs(oracle)))
+    np.testing.assert_allclose(np.asarray(served), np.asarray(oracle),
+                               atol=2e-3 * max(scale, 1.0))
+    for s in oracle_exits:
+        np.testing.assert_allclose(np.asarray(served_exits[s]),
+                                   np.asarray(oracle_exits[s]), atol=2e-3)
+
+
+def test_export_factored_pallas_matches_jnp_path():
+    """Factored convs route twice through the kernels: interpret-mode
+    Pallas serving == the jnp int8 reference serving."""
+    cfg = RESNET8_CIFAR.replace(w_bits=8, a_bits=8)
+    fam = CNNFamily(SyntheticImages())
+    params = fam.init(jax.random.key(0), cfg)
+    params, _, _ = fam.factorize(params, cfg, energy=0.6, min_rank=2)
+    x = jax.random.normal(jax.random.key(1), (2, 16, 16, 3))
+    m_ref = export_cnn(params, cfg, use_pallas=False)
+    m_pls = export_cnn(params, cfg, use_pallas=True)
+    np.testing.assert_allclose(np.asarray(m_pls.serve(x)),
+                               np.asarray(m_ref.serve(x)),
+                               rtol=1e-4, atol=1e-4)
+
+
 # ------------------------------------------------------- batched early exit
 
 

@@ -1,0 +1,274 @@
+"""Pass-registry + Pipeline API tests: registration round-trips, the
+planner stays consistent with the theoretical order over any key set,
+chain input validation rejects typos, Q reuses E's stored threshold, and
+the low-rank 'L' pass runs and exports end-to-end."""
+from dataclasses import dataclass, replace
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs.cnn import RESNET8_CIFAR
+from repro.core import registry
+from repro.core.chain import Pipeline, run_chain
+from repro.core.family import CNNFamily, LMFamily
+from repro.core.passes import (PASSES, ChainState, QuantHP, Trainer,
+                               init_chain_state)
+from repro.core.planner import (OrderPlanner, compare_orders, pass_rank,
+                                theoretical_order)
+from repro.data import SyntheticImages, SyntheticTokens
+
+TINY = Trainer(batch=16, steps=2, lr=2e-3, eval_n=1, eval_batch=32)
+
+
+@pytest.fixture(scope='module')
+def cnn_family():
+    return CNNFamily(SyntheticImages(difficulty=0.6), image=32)
+
+
+@pytest.fixture(scope='module')
+def tiny_state(cnn_family):
+    return init_chain_state(cnn_family, RESNET8_CIFAR, jax.random.key(0),
+                            TINY, pretrain_steps=2)
+
+
+def _copy(state):
+    st = replace(state)
+    st.history = list(state.history)
+    return st
+
+
+# ----------------------------------------------------------------- registry
+
+
+def test_registry_round_trip(cnn_family, tiny_state):
+    """Register a dummy pass → plan → chain → unregister, via public API
+    only (the third-party extension path)."""
+    @dataclass(frozen=True)
+    class ZHP:
+        marker: float = 1.0
+
+    ran = []
+
+    def z_fn(state, hp, trainer):
+        assert isinstance(hp, ZHP)
+        ran.append(hp.marker)
+        return replace(state, key=jax.random.fold_in(state.key, 99))
+
+    registry.register(registry.CompressionPass(
+        'Z', 'dummy', 'static', 'neuron', ZHP, z_fn))
+    try:
+        # plan: Z ties P on (static, neuron) and orders after it by key
+        assert theoretical_order() == 'DPZLQE'
+        pl = OrderPlanner()
+        assert 'Z' in pl.keys
+        # chain: typed hps thread through Pipeline.run
+        st = Pipeline.from_sequence('Z', {'Z': {'marker': 7.0}}).run(
+            cnn_family, None, TINY, state=_copy(tiny_state))
+        assert ran == [7.0]
+        assert [h['pass'] for h in st.history] == ['baseline', 'Z']
+        # the legacy PASSES view sees the new pass
+        assert 'Z' in PASSES and PASSES['Z'].name == 'dummy'
+    finally:
+        registry.unregister('Z')
+    with pytest.raises(KeyError):
+        registry.get_pass('Z')
+    assert theoretical_order() == 'DPLQE'
+
+
+def test_register_validates_metadata():
+    @dataclass(frozen=True)
+    class HP:
+        x: float = 0.0
+
+    fn = lambda s, h, t: s                                   # noqa: E731
+    with pytest.raises(ValueError, match='single uppercase'):
+        registry.register(registry.CompressionPass(
+            'zz', 'bad', 'static', 'neuron', HP, fn))
+    with pytest.raises(ValueError, match='already registered'):
+        registry.register(registry.CompressionPass(
+            'Q', 'clash', 'static', 'neuron', HP, fn))
+    with pytest.raises(ValueError, match='unknown kind'):
+        registry.register(registry.CompressionPass(
+            'Y', 'bad', 'adaptive', 'neuron', HP, fn))
+
+    @dataclass(frozen=True)
+    class NoDefault:
+        x: float
+
+    with pytest.raises(ValueError, match='needs a default'):
+        registry.register(registry.CompressionPass(
+            'Y', 'bad', 'static', 'neuron', NoDefault, fn))
+    assert registry.check_consistency() == ('D', 'E', 'L', 'P', 'Q')
+
+
+def test_hp_typo_rejected():
+    with pytest.raises(TypeError, match='unknown hyperparameters'):
+        registry.get_pass('Q').resolve_hp({'w_bit': 4})
+    # typed dataclasses pass through untouched
+    hp = QuantHP(w_bits=4, a_bits=8)
+    assert registry.get_pass('Q').resolve_hp(hp) is hp
+
+
+# ------------------------------------------------------------------ planner
+
+
+def test_theoretical_order_matches_planner_toposort_5pass():
+    """Acceptance: theoretical_order('DPLQE') == topo-sort of the pairwise
+    DAG built from the theoretical principles over all 5 passes."""
+    pl = OrderPlanner()
+    for a, b in pl.pairs():
+        pl.add_pairwise(a, b, 'AB' if pass_rank(a) <= pass_rank(b) else 'BA')
+    assert pl.topological_order() == theoretical_order('DPLQE') == 'DPLQE'
+
+
+def test_compare_orders_tie_falls_back_to_theory():
+    same = [(0.9, 10.0), (0.8, 40.0)]
+    w, sa, sb = compare_orders(same, list(same), 'L', 'Q')
+    assert (w, sa) == ('AB', sb)          # L ranks before Q
+    w, _, _ = compare_orders(same, list(same), 'Q', 'L')
+    assert w == 'BA'
+    w, _, _ = compare_orders(same, list(same))    # legacy: no keys given
+    assert w == 'AB'
+
+
+def test_resolve_cycles_drops_zero_margin_first():
+    pl = OrderPlanner('DPQ')
+    pl.add_pairwise('D', 'P', 'AB', margin=0.5)
+    pl.add_pairwise('P', 'Q', 'AB', margin=0.5)
+    pl.add_pairwise('D', 'Q', 'BA', margin=0.0)   # tied edge flips the order
+    dropped = pl.resolve_cycles()
+    assert dropped == [('Q', 'D')]
+    assert pl.topological_order() == 'DPQ'
+
+
+# ----------------------------------------------------------- chain inputs
+
+
+def test_pipeline_rejects_duplicates_and_strays():
+    with pytest.raises(ValueError, match='duplicate'):
+        Pipeline.from_sequence('DQQ')
+    assert Pipeline.from_sequence('QQ', allow_repeats=True).sequence == 'QQ'
+    with pytest.raises(ValueError, match="not in sequence"):
+        Pipeline.from_sequence('DQ', {'Q8': {'w_bits': 8}})
+    with pytest.raises(KeyError, match='unknown pass'):
+        Pipeline.from_sequence('DX')
+    with pytest.raises(ValueError, match='empty'):
+        Pipeline.from_sequence('')
+
+
+def test_pipeline_auto_follows_planner():
+    pl = OrderPlanner('PQ')
+    pl.add_pairwise('P', 'Q', 'BA')               # deliberately anti-theory
+    assert Pipeline.auto(pl).sequence == 'QP'
+    assert Pipeline.auto({'topological_order': 'PQ'}).sequence == 'PQ'
+
+
+# ------------------------------------------------- Q reuses E's threshold
+
+
+def test_quantize_reuses_stored_exit_threshold(monkeypatch):
+    fam = CNNFamily(SyntheticImages(difficulty=0.6), image=32)
+    params = fam.init(jax.random.key(0), RESNET8_CIFAR)
+    params, cfg = fam.add_exits(jax.random.key(1), params, RESNET8_CIFAR,
+                                fam.default_exit_points(RESNET8_CIFAR))
+    seen = []
+    real = fam.exit_stats
+    monkeypatch.setattr(
+        fam, 'exit_stats',
+        lambda p, c, batches, thr: seen.append(thr) or real(p, c, batches,
+                                                            thr))
+    st = ChainState(family=fam, cfg=cfg, params=params,
+                    key=jax.random.key(2), exit_probs={0: 0.5},
+                    exit_threshold=0.33, dyn_accuracy=0.5)
+    st2 = PASSES['Q'].apply(st, {'w_bits': 8, 'a_bits': 8}, TINY)
+    assert seen == [0.33]                 # E's operating point, not Q's hp
+    assert st2.exit_threshold == 0.33
+    # Q no longer accepts a threshold of its own
+    with pytest.raises(TypeError, match='unknown hyperparameters'):
+        PASSES['Q'].apply(st, {'threshold': 0.9}, TINY)
+
+
+def test_early_exit_records_threshold(cnn_family, tiny_state):
+    st = PASSES['E'].apply(_copy(tiny_state), {'threshold': 0.42}, TINY)
+    assert st.exit_threshold == 0.42
+
+
+# --------------------------------------------------------- low-rank pass
+
+
+def test_lowrank_chain_runs_and_exports(cnn_family, tiny_state):
+    from repro.core.export import export_chain
+    st = run_chain(cnn_family, None, 'LQ',
+                   {'L': {'energy': 0.5, 'min_rank': 2},
+                    'Q': {'w_bits': 8, 'a_bits': 8}},
+                   TINY, state=_copy(tiny_state))
+    assert [h['pass'] for h in st.history] == ['baseline', 'L', 'Q']
+    assert 0 < st.lowrank_scale < 1.0     # factorization saved stage MACs
+    assert any('u' in blk[k] for blocks in st.params['stages']
+               for blk in blocks for k in blk if isinstance(blk[k], dict))
+    assert st.history[-1]['CR'] > st.history[0]['CR']
+    model = export_chain(st)
+    out = model.serve(jnp.zeros((2, 32, 32, 3)))
+    assert out.shape == (2, st.cfg.num_classes)
+    assert bool(jnp.isfinite(out).all())
+
+
+def test_lowrank_registered_without_touching_core_consumers():
+    """'L' came in purely through registration: chain and planner handle it
+    with no key-specific branches."""
+    p = registry.get_pass('L')
+    assert (p.kind, p.granularity) == ('static', 'sub-neuron')
+    assert theoretical_order('LQ') == 'LQ'
+    assert Pipeline.from_sequence('DPLQE').sequence == 'DPLQE'
+
+
+def test_lm_factorize_stacked_and_prune_guard():
+    from repro.configs import get_smoke_config
+    cfg = get_smoke_config('tinyllama-1.1b', layers=4).replace(
+        vocab_size=128)
+    fam = LMFamily(SyntheticTokens(vocab=cfg.vocab_size), seq=32)
+    params = fam.init(jax.random.key(0), cfg)
+    fp, fcfg, scale = fam.factorize(params, cfg, energy=0.3, min_rank=2)
+    assert scale < 1.0
+    assert 'u' in fp['blocks'][0]['mlp']['wi']    # stacked scan group
+    batch = fam.train_batch(jax.random.key(1), 2)
+    assert bool(jnp.isfinite(fam.logits_of(fp, fcfg, batch)).all())
+    # bitops picks the weight-volume scale up
+    assert fam.bitops(fcfg, None, scale) < fam.bitops(fcfg)
+    # P after L is rejected with a clear message (sequence-law order)
+    with pytest.raises(ValueError, match='P before L'):
+        fam.prune(fp, fcfg, 0.3)
+
+
+def test_cnn_prune_guard_after_factorize(cnn_family):
+    params = cnn_family.init(jax.random.key(0), RESNET8_CIFAR)
+    fp, _, _ = cnn_family.factorize(params, RESNET8_CIFAR, energy=0.5,
+                                    min_rank=2)
+    with pytest.raises(ValueError, match='P before L'):
+        cnn_family.prune(fp, RESNET8_CIFAR, 0.3)
+
+
+# ------------------------------------------------------- serving backends
+
+
+def test_export_chain_unregistered_family_raises():
+    from repro.core.export import export_chain
+
+    class AlienFamily:
+        pass
+
+    st = ChainState(family=AlienFamily(), cfg=None, params={},
+                    key=jax.random.key(0))
+    with pytest.raises(KeyError, match='no serving backend'):
+        export_chain(st)
+
+
+def test_serving_backend_mro_lookup():
+    from repro.core.export import serving_backend_for
+
+    class MyCNNFamily(CNNFamily):
+        pass
+
+    fam = MyCNNFamily(SyntheticImages())
+    assert callable(serving_backend_for(fam))     # inherits CNN backend
