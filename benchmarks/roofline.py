@@ -24,6 +24,45 @@ PEAK_FLOPS = 197e12
 HBM_BW = 819e9
 ICI_BW = 50e9
 HBM_PER_CHIP = 16e9          # v5e
+INT8_PEAK_FLOPS = 394e12     # v5e MXU: int8 doubles bf16 MACs/cycle
+
+
+def int8_serving_roofline(plan_layers: dict) -> dict:
+    """Roofline terms for one exported-CNN serving step on v5e, from a
+    core/export.py LayerPlan's layer dicts (shapes include the batch).
+
+    Two memory models per step: the PR-1 exported path (fp32 activations
+    between layers + one abs-max read per layer) vs the int8-resident path
+    (activations int8 in HBM, no abs-max pass).  This is what the
+    requantize-epilogue work actually moves: the compute term is identical,
+    the activation-traffic term shrinks ~4x — the fp32 HBM floor that
+    bounded every previous speedup.
+    """
+    macs = sum(e['macs'] for e in plan_layers.values())
+    elems_in = sum(_prod(e['in_shape']) for e in plan_layers.values())
+    elems_out = sum(_prod(e['out_shape']) for e in plan_layers.values())
+    batch = next(iter(plan_layers.values()))['in_shape'][0]
+    flops = 2.0 * macs * batch
+    t_c = flops / INT8_PEAK_FLOPS
+    # fp32 path: read + write each layer boundary in fp32, plus the
+    # dynamic abs-max pass re-reading every layer input
+    t_m_fp32 = (4.0 * elems_in + 4.0 * elems_out + 4.0 * elems_in) / HBM_BW
+    t_m_int8 = (1.0 * elems_in + 1.0 * elems_out) / HBM_BW
+    return {
+        'compute_s': t_c,
+        'memory_s_fp32_roundtrip': t_m_fp32,
+        'memory_s_int8_resident': t_m_int8,
+        'bound_fp32': 'memory' if t_m_fp32 > t_c else 'compute',
+        'bound_int8': 'memory' if t_m_int8 > t_c else 'compute',
+        'traffic_reduction': t_m_fp32 / max(t_m_int8, 1e-30),
+    }
+
+
+def _prod(shape):
+    n = 1
+    for d in shape:
+        n *= d
+    return n
 
 SHAPE_TOKENS = {'train_4k': (256, 4096, 'train'),
                 'prefill_32k': (32, 32768, 'prefill'),

@@ -1,13 +1,31 @@
-"""Serving benchmark: fake-quant fp32 forward vs the exported int8 path.
+"""Serving benchmark: fake-quant fp32 forward vs the exported int8 paths.
 
 The chain's Q pass is only *analytically* cheaper until export: the QAT
 forward runs fp32 convs and recomputes per-channel weight abs-max scales on
 every call.  This benchmark times, per CNN config:
 
-* ``fakequant_fp32`` — the QAT forward (per-call weight scale recompute)
-* ``exported_int8``  — core/export.py serving fn (static weight scales,
-  int8 conv/matmul; jnp int8 path on CPU, Pallas kernels on TPU)
-* ``exported_int8_early_exit`` — batched early-exit serving (resnet8)
+* ``fakequant_fp32``  — the QAT forward (per-call weight scale recompute)
+* ``exported_int8``   — the PR-1 dynamic-scale export (static weight
+  scales, one activation abs-max per layer, fp32 between layers)
+* ``int8_resident``   — the layer-plan export (core/export.py
+  ``calibrate=...``): static activation scales, requantize epilogues,
+  int8 activations between layers, folded constants on the CPU backend
+* ``exported_int8_early_exit`` — batched early-exit serving (resnet8);
+  if no sample exits at the configured threshold, the benchmark warns and
+  recalibrates the threshold to the batch's median exit confidence so the
+  E pass is actually exercised
+* ``lowrank_fused`` / ``lowrank_two_launch`` — the factored ('L' pass)
+  model served with the one-launch fused kernel vs the chained pair (the
+  two lowerings are identical on the CPU jnp backend — the A/B becomes
+  real on TPU, where the launch counts differ; tests pin them)
+
+``--breakdown`` adds a per-layer table (im2col/patch-materialization cost
+vs kernel cost — the resnet8 int8 regression of PR 1 lived there) and the
+v5e roofline estimate for the fp32-roundtrip vs int8-resident HBM traffic.
+``--smoke`` runs a tiny batch with 2 iterations and writes nothing unless
+``--out`` is given (the scripts/ci.sh wiring).
+
+Timings are medians over ``--iters`` runs (CI boxes are noisy).
 
 Results go to BENCH_serving.json at the repo root.
 
@@ -18,6 +36,7 @@ from __future__ import annotations
 import argparse
 import json
 import os
+import statistics
 import time
 
 import jax
@@ -27,11 +46,86 @@ import jax.numpy as jnp
 def _time(fn, *args, warmup=2, iters=10):
     for _ in range(warmup):
         jax.block_until_ready(fn(*args))
-    t0 = time.perf_counter()
+    ts = []
     for _ in range(iters):
-        out = fn(*args)
-        jax.block_until_ready(out)
-    return (time.perf_counter() - t0) / iters * 1e6
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    return statistics.median(ts) * 1e6
+
+
+def _early_exit_entry(m, x, iters):
+    """Time batched early-exit serving; calibrate the threshold when the
+    configured one never fires (ChainState.exit_threshold must actually be
+    exercised at batch serving, not silently bypass every sample)."""
+    from repro.core.export import early_exit_batch
+    threshold = m.exit_threshold
+
+    def ee(p, x, thr):
+        logits, exits = m.fn_exits(p, x)
+        return early_exit_batch(logits, exits, thr)
+
+    jee = jax.jit(ee, static_argnums=(2,))
+    us = _time(jee, m.params, x, threshold, iters=iters)
+    _, stage = jee(m.params, x, threshold)
+    frac = float(jnp.mean(stage >= 0))
+    entry = {'exported_int8_early_exit_us': round(us, 1),
+             'exit_threshold': threshold,
+             'exit_fraction': round(frac, 3)}
+    if frac == 0.0:
+        # the threshold never fires on this input distribution: recalibrate
+        # to the median confidence of the earliest exit head and re-run
+        _, exits = m.fn_exits(m.params, x)
+        first = exits[min(exits)]
+        conf = jax.nn.softmax(first.astype(jnp.float32), -1).max(-1)
+        thr = float(jnp.median(conf)) - 1e-6
+        print(f'  WARNING: no sample exited at threshold {threshold:.2f}; '
+              f'recalibrated to batch-median confidence {thr:.3f}')
+        us2 = _time(jee, m.params, x, thr, iters=iters)
+        _, stage2 = jee(m.params, x, thr)
+        entry.update(
+            exit_threshold_calibrated=round(thr, 4),
+            exit_fraction_calibrated=round(float(jnp.mean(stage2 >= 0)), 3),
+            exported_int8_early_exit_calibrated_us=round(us2, 1))
+    return entry
+
+
+def _breakdown(m, x, iters, use_pallas):
+    """Per-layer costs from the layer plan: patch materialization (im2col)
+    vs the int8 kernel, over the exact serving shapes and the same
+    lowering (Pallas vs jnp reference) as the timed serving fn."""
+    from repro.kernels import ops
+    from repro.kernels.quant_conv import im2col_nhwc
+    rows = []
+    for name, e in m.plan.layers.items():
+        if e['kind'] != 'conv' or e['factored']:
+            continue
+        cin, cout = e['in_shape'][-1], e['out_shape'][-1]
+        kh, kw = e['kernel']
+        x_q = jnp.zeros(e['in_shape'], jnp.int8)
+        if e['fallback']:
+            # fallback layers never materialize im2col patches (they serve
+            # via lax.conv / shifted FMAs directly on NHWC) — no costs to
+            # attribute beyond the declared fp32 conv itself
+            us_i = us_k = None
+        else:
+            w_q = jnp.zeros((kh, kw, cin, cout), jnp.int8)
+            sw = jnp.ones((cout,), jnp.float32)
+            im2col = jax.jit(lambda v, k=(kh, kw), s=e['stride']:
+                             im2col_nhwc(v, k[0], k[1], s)[0])
+            us_i = round(_time(im2col, x_q, iters=iters), 1)
+            conv = jax.jit(lambda v, wq=w_q, s=e['stride'], sx=e['sx']:
+                           ops.quant_conv_static(v, wq, sw, sx=sx, stride=s,
+                                                 use_pallas=use_pallas))
+            us_k = round(_time(conv, x_q, iters=iters), 1)
+        rows.append({'layer': name, 'in_shape': list(e['in_shape']),
+                     'macs': e['macs'], 'im2col_us': us_i,
+                     'kernel_us': us_k, 'fallback': e['fallback']})
+        print(f"  {name:14s} in={str(e['in_shape']):>18s} "
+              f"macs={e['macs']:>10d} "
+              + ('fallback (no im2col)' if e['fallback'] else
+                 f'im2col={us_i:8.1f}us kernel={us_k:8.1f}us'))
+    return rows
 
 
 def main():
@@ -41,6 +135,9 @@ def main():
     from repro.core.family import CNNFamily
     from repro.data import SyntheticImages
     from repro.models.cnn import cnn_forward, init_cnn
+    import sys
+    sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+    from roofline import int8_serving_roofline
 
     ap = argparse.ArgumentParser()
     ap.add_argument('--batch', type=int, default=64)
@@ -48,16 +145,25 @@ def main():
     ap.add_argument('--pallas', action='store_true',
                     help='force the Pallas kernels (interpret mode on CPU '
                          '— correctness timing only, very slow)')
-    ap.add_argument('--out', default=os.path.join(
-        os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
-        'BENCH_serving.json'))
+    ap.add_argument('--breakdown', action='store_true',
+                    help='per-layer im2col/kernel timing + v5e roofline')
+    ap.add_argument('--smoke', action='store_true',
+                    help='tiny CI run: batch 8, 2 iters, no file output '
+                         'unless --out is given')
+    ap.add_argument('--out', default=None)
     args = ap.parse_args()
+    if args.smoke:
+        args.batch, args.iters = min(args.batch, 8), min(args.iters, 2)
+    out = args.out
+    if out is None and not args.smoke:
+        out = os.path.join(os.path.dirname(os.path.dirname(
+            os.path.abspath(__file__))), 'BENCH_serving.json')
 
     # Same auto-dispatch rule export_cnn applies for use_pallas=None, made
     # explicit here so the recorded label always matches the timed path.
-    # On CPU the jnp reference path uses an int8 einsum for dense layers
-    # but dequantizes convs to fp32 lax.conv (no int8 conv units) — CPU
-    # "speedup" isolates the static-scale win, not int8 compute.
+    # On CPU the jnp path serves convs as fp32 lax.conv with export-folded
+    # scales (no int8 conv units) — the CPU win is static scales + folded
+    # dequant + the cheap depthwise lowering, not int8 compute.
     use_pallas = args.pallas or jax.default_backend() == 'tpu'
     x = jax.random.normal(jax.random.key(0), (args.batch, 32, 32, 3))
     fam = CNNFamily(SyntheticImages())
@@ -80,30 +186,66 @@ def main():
         m = export_cnn(params, cfg, use_pallas=use_pallas)
         us_int8 = _time(m.fn, m.params, x, iters=args.iters)
 
+        m_res = export_cnn(params, cfg, use_pallas=use_pallas, calibrate=x)
+        us_res = _time(m_res.fn, m_res.params, x, iters=args.iters)
+
         entry = {'fakequant_fp32_us': round(us_fake, 1),
                  'exported_int8_us': round(us_int8, 1),
-                 'speedup': round(us_fake / us_int8, 3)}
+                 'int8_resident_us': round(us_res, 1),
+                 'speedup': round(us_fake / us_int8, 3),
+                 'resident_speedup': round(us_fake / us_res, 3),
+                 'resident_vs_exported': round(us_int8 / us_res, 3),
+                 'plan': m_res.summary()}
         if cfg.exit_stages:
-            from repro.core.export import early_exit_batch
+            m.exit_threshold = 0.85
+            entry.update(_early_exit_entry(m, x, args.iters))
 
-            @jax.jit
-            def ee(p, x):            # the full deployed early-exit path:
-                logits, exits = m.fn_exits(p, x)   # forward + exit heads
-                return early_exit_batch(logits, exits, 0.85)   # + selection
+        # the 'fused' variant: the L-pass factored model, one-launch fused
+        # kernel vs chained two-launch serving (same plan otherwise)
+        fparams, _, mac_scale = fam.factorize(params, cfg, energy=0.6,
+                                              min_rank=2)
+        m_fused = export_cnn(fparams, cfg, use_pallas=use_pallas,
+                             calibrate=x)
+        m_2l = export_cnn(fparams, cfg, use_pallas=use_pallas, calibrate=x,
+                          fuse_lowrank=False)
+        if m_fused.summary()['n_fused_lowrank'] > 0:
+            entry['fused'] = {
+                'lowrank_mac_scale': round(mac_scale, 4),
+                'n_fused_lowrank': m_fused.summary()['n_fused_lowrank'],
+                'kernel_launches_fused':
+                    m_fused.summary()['kernel_launches'],
+                'kernel_launches_two_launch':
+                    m_2l.summary()['kernel_launches'],
+                'lowrank_fused_us': round(
+                    _time(m_fused.fn, m_fused.params, x,
+                          iters=args.iters), 1),
+                'lowrank_two_launch_us': round(
+                    _time(m_2l.fn, m_2l.params, x, iters=args.iters), 1),
+            }
 
-            us_ee = _time(ee, m.params, x, iters=args.iters)
-            _, stage = ee(m.params, x)
-            entry['exported_int8_early_exit_us'] = round(us_ee, 1)
-            entry['exit_fraction'] = round(
-                float(jnp.mean(stage >= 0)), 3)
+        if args.breakdown:
+            print(f'{cfg.name} per-layer breakdown:')
+            entry['layers'] = _breakdown(m_res, x, args.iters, use_pallas)
+            # roofline over the plain serving path only — exit-head fc
+            # layers are calibrated into the plan but fn never runs them
+            # (LayerPlan.summary() splits them out the same way)
+            entry['roofline_v5e'] = {
+                k: (round(v, 9) if isinstance(v, float) else v)
+                for k, v in int8_serving_roofline(
+                    {n: e for n, e in m_res.plan.layers.items()
+                     if not n.startswith('exit')}).items()}
+
         results['configs'][cfg.name] = entry
         print(f'{cfg.name}: fakequant_fp32={us_fake:.1f}us '
               f'exported_int8={us_int8:.1f}us '
-              f'speedup={us_fake / us_int8:.2f}x')
+              f'int8_resident={us_res:.1f}us '
+              f'resident_vs_exported={us_int8 / us_res:.2f}x '
+              f'(fallback MAC {entry["plan"]["fallback_mac_fraction"]:.1%})')
 
-    with open(args.out, 'w') as f:
-        json.dump(results, f, indent=1)
-    print(f'wrote {args.out}')
+    if out:
+        with open(out, 'w') as f:
+            json.dump(results, f, indent=1)
+        print(f'wrote {out}')
 
 
 if __name__ == '__main__':

@@ -23,4 +23,10 @@ PY
 
 python examples/quickstart.py --smoke
 
+# serving-benchmark smoke: times the fake-quant / dynamic-int8 /
+# int8-resident paths (incl. the fused low-rank variant) on a tiny batch —
+# catches export-plan regressions that only bite at serve time.  Writes no
+# BENCH file (the committed BENCH_serving.json comes from a full run).
+python benchmarks/serving_int8.py --smoke
+
 exec python -m pytest -x -q "$@"

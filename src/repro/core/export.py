@@ -3,36 +3,50 @@ function running on the Pallas kernels.
 
 ``export_chain`` routes through a per-family serving-backend registry
 (:func:`register_serving_backend`) — third-party families plug in serving
-the same way third-party passes plug into core/registry.py.  Low-rank
-factored layers (the 'L' pass) serve as two chained int8 kernel calls.
+the same way third-party passes plug into core/registry.py.
 
 The chain (e.g. D→P→L→Q→E over the registered passes, core/passes.py /
-core/lowrank.py) ends with *fake-quant* params: every
-forward still runs fp32 convs/matmuls and recomputes per-channel weight
-abs-max scales per call.  This module realizes the Q pass at inference:
+core/lowrank.py) ends with *fake-quant* params: every forward still runs
+fp32 convs/matmuls and recomputes per-channel weight abs-max scales per
+call.  This module realizes the Q pass at inference in two tiers:
 
-1. **Snapshot scales once** — ``quantize_params_for_serving`` converts every
-   conv/fc weight to an int8 pytree with static per-out-channel scales
-   (weight abs-max is computed exactly once, at export).
-2. **Route to kernels** — the jit'd serving function replays the model
-   topology via ``cnn_forward``'s layer injection, sending convs through
-   the im2col int8 conv (kernels/quant_conv.py) and fcs through the int8
-   matmul (kernels/quant_matmul.py), both with fused dequant(+bias)
-   epilogues.  Only *activation* scales are computed per call (dynamic
-   activation quantization — one per-tensor abs-max per layer, matching the
-   QAT grid of core/quantization.fake_quant_act, so exported outputs track
-   the fake-quant oracle tightly).
+1. **Dynamic-scale path** (``calibrate=None``, the PR-1 behavior):
+   weights are snapshotted to int8 once (static per-out-channel scales) and
+   activations get one dynamic per-tensor abs-max per layer — every layer
+   reads/writes fp32 activations in HBM.
+2. **Int8-resident path** (``calibrate=<sample batch>``): a *layer-plan
+   compiler* runs one eager calibration forward over the sample batch,
+   records a static activation scale for every layer boundary, and compiles
+   a plan that picks, per layer:
+
+   * the **fused low-rank kernel** (kernels/lowrank_conv.py) — a factored
+     (u, v) conv pair in ONE Pallas launch, rank intermediate in VMEM —
+     whenever the lane-padded rank fits a single 128 tile;
+   * the **chained** int8 kernels (u then v, both int8-resident) otherwise;
+   * the plain int8 conv/matmul kernels with the **requantize epilogue**
+     (kernels/quant_matmul.py ``out_scale``) for unfactored layers;
+   * the declared **fp32 fallback** (dequantized ``lax.conv``) for grouped
+     /depthwise convs, whose MAC fraction the plan summary reports.
+
+   Activation scales are static Python floats baked into the jaxpr; no
+   abs-max pass ever reads an activation tensor at serve time.  Between
+   layers activations travel as int8 (``QAct``): conv kernels emit int8
+   via the requantize epilogue, and the glue stage (GroupNorm + skip +
+   ReLU, injected over models/cnn.py ``glue_fn``) dequantizes in-register
+   and requantizes to the consumer's static scale — fp32 only appears at
+   the final/exit logits and inside declared fallback layers.
+
 3. **Batched early exit** — the E pass's exit heads are served batched:
    every sample takes its earliest confident exit (softmax confidence over
    a threshold), vectorized with where-masks instead of per-sample control
-   flow.
+   flow.  ``export_chain`` threads the chain's calibrated
+   ``exit_threshold`` into the served model.
 
 On CPU (``use_pallas=None`` → auto) the serving function runs the pure-jnp
 reference path: identical math and static scales, with dense layers on a
-real int8 einsum but convs dequantized to an fp32 ``lax.conv``
-(ref.quant_conv_ref) — CPU has no int8 conv units, so the CPU win is
-limited to eliminating the per-call weight-scale recompute.  The genuine
-int8 conv tiles are the TPU path (Mosaic-compiled Pallas kernels).
+real int8 einsum but convs running a ``lax.conv`` whose operands are
+dequantized in one fused XLA pass (CPU has no int8 conv units).  The
+genuine int8 conv tiles are the TPU path (Mosaic-compiled Pallas kernels).
 """
 from __future__ import annotations
 
@@ -43,7 +57,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.quantization import quantize_params_for_serving
-from repro.kernels import ops
+from repro.kernels import ops, ref
+from repro.kernels.lowrank_conv import fits_fused
 from repro.models import cnn as cnn_lib
 
 
@@ -58,7 +73,8 @@ def _serving_bits(cfg) -> tuple[int, int]:
 
 
 def _serving_layers(use_pallas: bool, a_bits: int):
-    """Int8 layer implementations injected into cnn_forward.
+    """Dynamic-scale int8 layer implementations injected into cnn_forward
+    (the PR-1 exported path; cf. the int8-resident plan below).
 
     Weight scales live in the params pytree (static); quant here is the
     cfg hook tuple, ignored for weights — that is the QAT/serving split.
@@ -66,8 +82,8 @@ def _serving_layers(use_pallas: bool, a_bits: int):
     half already int8+scale after quantize_params_for_serving) chain two
     kernel calls, mirroring the QAT dispatch in models/cnn.py.
     """
-    def conv_fn(p, x, *, stride=1, quant=(0, 0), groups=1):
-        del quant
+    def conv_fn(p, x, *, stride=1, quant=(0, 0), groups=1, name=None):
+        del quant, name
         if 'u' in p:
             h = conv_fn(p['u'], x, stride=stride, groups=groups)
             return conv_fn(p['v'], h)
@@ -75,8 +91,8 @@ def _serving_layers(use_pallas: bool, a_bits: int):
                                    stride=stride, groups=groups,
                                    a_bits=a_bits, use_pallas=use_pallas)
 
-    def fc_fn(p, x, *, quant=(0, 0)):
-        del quant
+    def fc_fn(p, x, *, quant=(0, 0), name=None):
+        del quant, name
         if 'u' in p:
             return fc_fn(p['v'], fc_fn(p['u'], x))
         y = ops.quant_dense(x, p['w_q'], p['scale'], a_bits=a_bits,
@@ -84,6 +100,333 @@ def _serving_layers(use_pallas: bool, a_bits: int):
         return y + p['b'] if 'b' in p else y
 
     return conv_fn, fc_fn
+
+
+# ------------------------------------------------ int8-resident layer plan
+
+
+@dataclass(frozen=True)
+class QAct:
+    """An int8 activation travelling between layers with its static scale.
+
+    ``scale`` is a Python float captured at export calibration — a jaxpr
+    constant, never recomputed at serve time.  The struct only exists
+    inside the traced serving function; HBM sees the int8 ``q`` alone.
+    """
+    q: Any
+    scale: float
+
+    @property
+    def shape(self):
+        return self.q.shape
+
+
+def _deq(x):
+    """In-register dequantize (identity on tensors already fp32)."""
+    if isinstance(x, QAct):
+        return x.q.astype(jnp.float32) * x.scale
+    return x
+
+
+@dataclass
+class LayerPlan:
+    """The layer-plan compiler's output: per-layer static scales + kernel
+    choice, keyed by the stable layer names models/cnn.py threads through
+    cnn_forward.  ``layers`` covers convs/fcs, ``glues`` the inter-layer
+    norm/act boundaries."""
+    layers: dict
+    glues: dict
+    a_qmax: float
+
+    def summary(self) -> dict:
+        """Deployed-cost summary: MACs by kernel class, launch counts, and
+        the MAC fraction still served by the dequantized fp32 fallback
+        (depthwise/grouped convs) — the mobilenet configs' residual fp32
+        cost, reported so it cannot hide.
+
+        Counts cover the plain serving path (``ServingModel.fn``); the
+        early-exit heads — calibrated too, but only executed by
+        ``fn_exits`` — are reported separately as ``n_exit_heads`` /
+        ``exit_head_launches``."""
+        main = {n: e for n, e in self.layers.items()
+                if not n.startswith('exit')}
+        exits = {n: e for n, e in self.layers.items()
+                 if n.startswith('exit')}
+        total = sum(e['macs'] for e in main.values())
+        fallback = sum(e['macs'] for e in main.values() if e['fallback'])
+        return {
+            'n_layers': len(main),
+            'n_fused_lowrank': sum(1 for e in main.values()
+                                   if e.get('fused')),
+            'n_chained_lowrank': sum(1 for e in main.values()
+                                     if e.get('factored')
+                                     and not e.get('fused')),
+            'n_fallback': sum(1 for e in main.values() if e['fallback']),
+            'kernel_launches': sum(e['launches'] for e in main.values()),
+            'n_exit_heads': len(exits),
+            'exit_head_launches': sum(e['launches'] for e in exits.values()),
+            'total_macs': total,
+            'fallback_mac_fraction': fallback / max(total, 1),
+        }
+
+
+def _compile_layer_plan(params, cfg, x, a_qmax,
+                        fuse_lowrank=True) -> LayerPlan:
+    """One eager calibration forward (the QAT fake-quant math) that records
+    a static activation scale at every layer boundary and picks the serving
+    kernel per layer (fused low-rank / chained / plain / fallback).
+    ``fuse_lowrank=False`` forces factored pairs onto the chained
+    two-launch lowering (the benchmark A/B)."""
+    layers, glues = {}, {}
+
+    def amax(v) -> float:
+        return max(float(jnp.max(jnp.abs(v))), 1e-8)
+
+    def conv_fn(p, cx, *, stride=1, quant=(0, 0), groups=1, name=None):
+        e = {'sx': amax(cx) / a_qmax, 'kind': 'conv', 'fallback': groups > 1,
+             'factored': 'u' in p, 'fused': False, 'stride': stride,
+             'in_shape': tuple(cx.shape)}
+        if 'u' in p:
+            mid = cnn_lib.conv(p['u'], cx, stride=stride, quant=quant,
+                               groups=groups)
+            y = cnn_lib.conv(p['v'], mid, quant=quant)
+            e['h_scale'] = amax(mid) / a_qmax
+            kh, kw, cin, r = p['u']['w'].shape
+            cout = p['v']['w'].shape[-1]
+            oh, ow = y.shape[1], y.shape[2]
+            e['macs'] = oh * ow * r * (kh * kw * cin + cout)
+            e['fused'] = fuse_lowrank and fits_fused(r, cout)
+            e['launches'] = 1 if e['fused'] else 2
+            e['rank'] = r
+            e['kernel'] = (kh, kw)
+        else:
+            y = cnn_lib.conv(p, cx, stride=stride, quant=quant, groups=groups)
+            kh, kw, cin, cout = p['w'].shape
+            oh, ow = y.shape[1], y.shape[2]
+            e['macs'] = oh * ow * kh * kw * cin * cout
+            e['launches'] = 0 if e['fallback'] else 1
+            e['kernel'] = (kh, kw)
+        e['out_scale'] = amax(y) / a_qmax
+        e['out_shape'] = tuple(y.shape)
+        layers[name] = e
+        return y
+
+    def fc_fn(p, cx, *, quant=(0, 0), name=None):
+        e = {'sx': amax(cx) / a_qmax, 'kind': 'fc', 'fallback': False,
+             'factored': 'u' in p, 'fused': False, 'out_scale': None,
+             'in_shape': tuple(cx.shape)}
+        if 'u' in p:
+            mid = cnn_lib.fc(p['u'], cx, quant=quant)
+            y = cnn_lib.fc(p['v'], mid, quant=quant)
+            e['h_scale'] = amax(mid) / a_qmax
+            din, r = p['u']['w'].shape
+            e['macs'] = r * (din + p['v']['w'].shape[-1])
+            e['launches'] = 2
+        else:
+            y = cnn_lib.fc(p, cx, quant=quant)
+            e['macs'] = p['w'].shape[0] * p['w'].shape[1]
+            e['launches'] = 1
+        e['out_shape'] = tuple(y.shape)
+        layers[name] = e
+        return y
+
+    def glue_fn(np_, y, *, act=None, skip=None, name=None):
+        h = cnn_lib.norm_act(np_, y, act=act, skip=skip)
+        glues[name] = amax(h) / a_qmax
+        return h
+
+    cnn_lib.cnn_forward(params, cfg, x, collect_exits=True, conv_fn=conv_fn,
+                        fc_fn=fc_fn, glue_fn=glue_fn)
+    return LayerPlan(layers=layers, glues=glues, a_qmax=a_qmax)
+
+
+def _conv_f32(x, w, stride=1, groups=1):
+    return jax.lax.conv_general_dilated(
+        x, w, (stride, stride), 'SAME', feature_group_count=groups,
+        dimension_numbers=('NHWC', 'HWIO', 'NHWC'))
+
+
+def _depthwise_shift_conv(x, w, stride=1):
+    """Depthwise SAME conv as kh*kw shifted multiply-accumulates.
+
+    XLA CPU lowers ``feature_group_count=C`` convs to a per-group loop
+    that is ~20x slower than these C-wide elementwise FMAs; on the
+    int8-resident CPU plan the declared depthwise fallback uses this
+    instead.  x fp32 (B,H,W,C); w fp32 (KH,KW,1,C) — already
+    scale-folded.  Value-identical to lax.conv (same pads, fp32 FMAs).
+    """
+    B, H, W, C = x.shape
+    kh, kw = w.shape[0], w.shape[1]
+    oh, ow = -(-H // stride), -(-W // stride)
+    pad_h = max((oh - 1) * stride + kh - H, 0)
+    pad_w = max((ow - 1) * stride + kw - W, 0)
+    x = jnp.pad(x, ((0, 0), (pad_h // 2, pad_h - pad_h // 2),
+                    (pad_w // 2, pad_w - pad_w // 2), (0, 0)))
+    y = None
+    for i in range(kh):
+        for j in range(kw):
+            t = x[:, i:i + (oh - 1) * stride + 1:stride,
+                  j:j + (ow - 1) * stride + 1:stride, :] * w[i, j, 0]
+            y = t if y is None else y + t
+    return y
+
+
+def _fold_conv_consts(plan: LayerPlan, qparams):
+    """Export-time constant folding for the jnp (CPU) backend.
+
+    CPU convs run fp32 ``lax.conv`` regardless (no int8 conv units), so
+    the dequant multiplies are hoisted out of the serve loop entirely:
+    each conv's int8 weight is dequantized ONCE here and pre-scaled by the
+    layer's *static* input scale — ``conv(x_q*sx, w_q*sw) ==
+    conv(x_q, w_q*(sx*sw))`` by bilinearity.  At serve time the activation
+    only pays an int8→fp32 cast.  Keyed by layer name; baked into the
+    jaxpr as constants (the ``params`` argument keeps the int8 contract
+    for storage/HBM accounting)."""
+    fold = {}
+    # resolve each plan layer's param subtree by its name path
+    # (s0b1.conv2 -> stages[0][1]['conv2']) and pre-scale the weights
+    for name, e in plan.layers.items():
+        p = _resolve_layer_params(qparams, name)
+        if e['kind'] != 'conv':
+            continue
+        if e['factored']:
+            u, v = p['u'], p['v']
+            fold[name] = {
+                'u_w': u['w_q'].astype(jnp.float32) * u['scale'] * e['sx'],
+                'u_b': u.get('b', 0.0),
+                'v_w': v['w_q'].astype(jnp.float32) * v['scale']
+                       * e['h_scale'],
+                'v_b': v.get('b', 0.0),
+            }
+        else:
+            fold[name] = {'w': p['w_q'].astype(jnp.float32) * p['scale']
+                          * e['sx'],
+                          'b': p.get('b', 0.0)}
+    return fold
+
+
+def _resolve_layer_params(params, name: str):
+    """Map a stable layer name from models/cnn.py (``s0b1.conv2``,
+    ``stem``, ``exit1``, ``head``) to its param subtree."""
+    head = name.split('.')[0]
+    if head == 'stem':
+        return params['stem']
+    if head == 'head':
+        return params['head']
+    if head.startswith('exit'):
+        return params['exits'][head[4:]]
+    s, b = head[1:].split('b')
+    return params['stages'][int(s)][int(b)][name.split('.')[1]]
+
+
+def _resident_layers(plan: LayerPlan, use_pallas: bool, qparams=None):
+    """Int8-resident layer implementations compiled from a LayerPlan.
+
+    Pallas backend: convs consume/produce :class:`QAct` — int8 in HBM on
+    static scales, requantize epilogues fused into the kernels, factored
+    pairs in one launch when the rank fits.  The glue stage (GroupNorm +
+    skip + activation) runs on the raw int8 codes (GroupNorm is invariant
+    to the positive per-tensor scale, up to eps) and requantizes to its
+    calibrated output scale — which by construction equals the consumer's
+    input scale (both were recorded off the same tensor at calibration).
+
+    jnp (CPU) backend: inter-layer tensors are the same int8 QActs, but
+    inside a layer the conv carries fp32 (CPU has no int8 conv units, so
+    an intra-layer int8 bounce would only add round-trips); all dequant
+    multiplies are folded into export-time constants
+    (:func:`_fold_conv_consts`), leaving one int8→fp32 cast per conv.
+
+    Grouped convs are the declared fp32 fallback on both backends: QAct
+    in, fp32 out, re-quantized by the next glue.
+    """
+    qmax = plan.a_qmax
+    fold = None if use_pallas else _fold_conv_consts(plan, qparams)
+
+    def as_qact(x, sx):
+        if isinstance(x, QAct):
+            return x
+        return QAct(ref.requantize(x, sx, qmax), sx)
+
+    def conv_fn(p, x, *, stride=1, quant=(0, 0), groups=1, name=None):
+        del quant
+        e = plan.layers[name]
+        xq = as_qact(x, e['sx'])
+        if e['fallback']:
+            if not use_pallas and p['w_q'].shape[2] == 1:  # depthwise
+                f = fold[name]
+                return _depthwise_shift_conv(xq.q.astype(jnp.float32),
+                                             f['w'], stride) + f['b']
+            return ref.quant_conv_ref(xq.q, p['w_q'], xq.scale, p['scale'],
+                                      p.get('b'), stride=stride,
+                                      groups=groups)
+        if not use_pallas:
+            f = fold[name]
+            xf = xq.q.astype(jnp.float32)
+            if e['factored']:
+                h = _conv_f32(xf, f['u_w'], stride) + f['u_b']
+                h_q = ref.requantize(h, e['h_scale'], qmax)
+                y = _conv_f32(h_q.astype(jnp.float32), f['v_w']) + f['v_b']
+            else:
+                y = _conv_f32(xf, f['w'], stride) + f['b']
+            return y                     # fp32-carry to this layer's glue
+        if e['factored']:
+            u, v = p['u'], p['v']
+            bu = u.get('b', jnp.zeros(u['w_q'].shape[-1], jnp.float32))
+            bv = v.get('b', jnp.zeros(v['w_q'].shape[-1], jnp.float32))
+            if e['fused']:
+                y = ops.lowrank_conv_nhwc(
+                    xq.q, u['w_q'], v['w_q'], u['scale'], v['scale'], bu, bv,
+                    sx=xq.scale, h_scale=e['h_scale'], stride=stride,
+                    out_scale=e['out_scale'], h_qmax=qmax, out_qmax=qmax,
+                    use_pallas=True)
+            else:
+                h = ops.quant_conv_static(
+                    xq.q, u['w_q'], u['scale'], bu, sx=xq.scale,
+                    stride=stride, out_scale=e['h_scale'], out_qmax=qmax,
+                    use_pallas=True)
+                y = ops.quant_conv_static(
+                    h, v['w_q'], v['scale'], bv, sx=e['h_scale'],
+                    out_scale=e['out_scale'], out_qmax=qmax, use_pallas=True)
+        else:
+            y = ops.quant_conv_static(
+                xq.q, p['w_q'], p['scale'], p.get('b'), sx=xq.scale,
+                stride=stride, out_scale=e['out_scale'], out_qmax=qmax,
+                use_pallas=True)
+        return QAct(y, e['out_scale'])
+
+    def fc_fn(p, x, *, quant=(0, 0), name=None):
+        del quant
+        e = plan.layers[name]
+        xq = ref.requantize(_deq(x), e['sx'], qmax)
+        if e['factored']:
+            h = ops.quant_dense_static(
+                xq, p['u']['w_q'], p['u']['scale'], p['u'].get('b'),
+                sx=e['sx'], out_scale=e['h_scale'], out_qmax=qmax,
+                use_pallas=use_pallas)
+            return ops.quant_dense_static(
+                h, p['v']['w_q'], p['v']['scale'], p['v'].get('b'),
+                sx=e['h_scale'], use_pallas=use_pallas)
+        return ops.quant_dense_static(xq, p['w_q'], p['scale'], p.get('b'),
+                                      sx=e['sx'], use_pallas=use_pallas)
+
+    def glue_fn(np_, y, *, act=None, skip=None, name=None):
+        s = plan.glues[name]
+        # GroupNorm is invariant to the input's positive per-tensor scale
+        # (up to eps), so int8 inputs are normalized on their raw codes —
+        # no dequantize multiply before the reduction.
+        h = cnn_lib.group_norm(
+            np_, y.q.astype(jnp.float32) if isinstance(y, QAct) else y)
+        if skip is not None:
+            h = h + _deq(skip)
+        h = cnn_lib._ACTS[act](h)
+        return QAct(ref.requantize(h, s, qmax), s)
+
+    def pool_fn(h):
+        if isinstance(h, QAct):           # scale the (B,C) mean, not the map
+            return h.q.astype(jnp.float32).mean(axis=(1, 2)) * h.scale
+        return h.mean(axis=(1, 2))
+
+    return conv_fn, fc_fn, glue_fn, pool_fn
 
 
 def early_exit_batch(logits, exits, threshold):
@@ -112,37 +455,65 @@ class ServingModel:
     params: Any                # int8 pytree: {'w_q', 'scale'(, 'b')} leaves
     fn: Callable               # jit'd (params, x) -> logits
     fn_exits: Callable | None = None   # jit'd (params, x) -> (logits, exits)
+    plan: LayerPlan | None = None      # int8-resident exports only
+    exit_threshold: float = 0.9        # E's operating point (export_chain)
 
     def serve(self, x):
         return self.fn(self.params, x)
 
-    def serve_early_exit(self, x, threshold=0.9):
-        """(pred, stage) per sample; requires exported exit heads."""
+    def serve_early_exit(self, x, threshold=None):
+        """(pred, stage) per sample; requires exported exit heads.
+        ``threshold=None`` uses the chain's calibrated operating point."""
         if self.fn_exits is None:
             raise ValueError('model was exported without exit heads')
+        if threshold is None:
+            threshold = self.exit_threshold
         logits, exits = self.fn_exits(self.params, x)
         return early_exit_batch(logits, exits, threshold)
 
+    def summary(self) -> dict | None:
+        """The layer plan's deployed-cost summary (int8-resident exports)."""
+        return self.plan.summary() if self.plan is not None else None
 
-def export_cnn(params, cfg, *, use_pallas=None) -> ServingModel:
-    """Compile a (possibly chain-compressed) CNN to the int8 serving path."""
+
+def export_cnn(params, cfg, *, use_pallas=None, calibrate=None,
+               fuse_lowrank=True) -> ServingModel:
+    """Compile a (possibly chain-compressed) CNN to the int8 serving path.
+
+    ``calibrate`` (a sample input batch) selects the int8-resident plan:
+    static activation scales, requantize epilogues, fused low-rank
+    launches (``fuse_lowrank=False`` forces the chained two-launch A/B).
+    ``calibrate=None`` keeps the dynamic-scale path (one abs-max per layer
+    per call, fp32 activations between layers).
+    """
     if use_pallas is None:
         use_pallas = jax.default_backend() == 'tpu'   # kernels are Mosaic-only
     w_bits, a_bits = _serving_bits(cfg)
     qparams = quantize_params_for_serving(params, bits=w_bits)
-    conv_fn, fc_fn = _serving_layers(use_pallas, a_bits)
+    plan = None
+    if calibrate is not None:
+        a_qmax = 2.0 ** (a_bits - 1) - 1.0
+        plan = _compile_layer_plan(params, cfg, calibrate, a_qmax,
+                                   fuse_lowrank=fuse_lowrank)
+        conv_fn, fc_fn, glue_fn, pool_fn = _resident_layers(
+            plan, use_pallas, qparams=qparams)
+        kw = dict(conv_fn=conv_fn, fc_fn=fc_fn, glue_fn=glue_fn,
+                  pool_fn=pool_fn)
+    else:
+        conv_fn, fc_fn = _serving_layers(use_pallas, a_bits)
+        kw = dict(conv_fn=conv_fn, fc_fn=fc_fn)
 
     @jax.jit
     def fn(p, x):
-        return cnn_lib.cnn_forward(p, cfg, x, conv_fn=conv_fn, fc_fn=fc_fn)
+        return cnn_lib.cnn_forward(p, cfg, x, **kw)
 
     @jax.jit
     def fn_exits(p, x):
-        return cnn_lib.cnn_forward(p, cfg, x, collect_exits=True,
-                                   conv_fn=conv_fn, fc_fn=fc_fn)
+        return cnn_lib.cnn_forward(p, cfg, x, collect_exits=True, **kw)
 
     return ServingModel(cfg=cfg, params=qparams, fn=fn,
-                        fn_exits=fn_exits if cfg.exit_stages else None)
+                        fn_exits=fn_exits if cfg.exit_stages else None,
+                        plan=plan)
 
 
 def export_lm(params, cfg) -> ServingModel:
@@ -163,10 +534,10 @@ def export_lm(params, cfg) -> ServingModel:
 
 # ----------------------------------------------------- serving backends
 
-# {family class: (state, use_pallas) -> ServingModel}.  Third-party model
-# families register here (mirroring the pass registry in core/registry.py)
-# instead of core growing isinstance branches; lookup walks the MRO so
-# subclassed families inherit their base family's backend.
+# {family class: (state, use_pallas, calibrate) -> ServingModel}.  Third-
+# party model families register here (mirroring the pass registry in
+# core/registry.py) instead of core growing isinstance branches; lookup
+# walks the MRO so subclassed families inherit their base family's backend.
 _SERVING_BACKENDS: dict[type, Callable] = {}
 
 
@@ -184,18 +555,44 @@ def serving_backend_for(family) -> Callable:
         f'call export.register_serving_backend(FamilyCls, backend)')
 
 
-def export_chain(state, *, use_pallas=None) -> ServingModel:
+def export_chain(state, *, use_pallas=None, calibrate=None) -> ServingModel:
     """Export a finished ChainState for serving via the family's registered
-    backend (old behavior — an isinstance(CNNFamily) branch — is now an
-    open registry; see register_serving_backend)."""
-    return serving_backend_for(state.family)(state, use_pallas)
+    backend.  ``calibrate`` (sample inputs) requests the int8-resident
+    plan; the chain's E-pass operating point (``state.exit_threshold``)
+    is threaded into the served model.
+
+    Backends registered against the original two-arg ``(state,
+    use_pallas)`` contract keep working: ``calibrate`` is only forwarded
+    (as a keyword) to backends that declare it."""
+    import inspect
+    backend = serving_backend_for(state.family)
+    sig = inspect.signature(backend).parameters
+    takes_calibrate = 'calibrate' in sig or any(
+        p.kind is p.VAR_KEYWORD for p in sig.values())
+    if takes_calibrate:
+        model = backend(state, use_pallas, calibrate=calibrate)
+    elif calibrate is not None:
+        raise TypeError(
+            f'serving backend {backend!r} for {type(state.family).__name__} '
+            f'does not accept calibrate= (int8-resident export); register '
+            f'a backend with a (state, use_pallas, calibrate=None) '
+            f'signature')
+    else:
+        model = backend(state, use_pallas)
+    if getattr(state, 'exit_threshold', None) is not None:
+        model.exit_threshold = state.exit_threshold
+    return model
 
 
 def _register_builtin_backends():
     from repro.core.family import CNNFamily, LMFamily
     register_serving_backend(
-        CNNFamily, lambda state, use_pallas: export_cnn(
-            state.params, state.cfg, use_pallas=use_pallas))
+        CNNFamily, lambda state, use_pallas, calibrate=None: export_cnn(
+            state.params, state.cfg, use_pallas=use_pallas,
+            calibrate=calibrate))
+    # the LM backend has no resident plan yet: it deliberately keeps the
+    # two-arg signature so export_chain's calibrate guard raises instead of
+    # silently ignoring a calibration batch
     register_serving_backend(
         LMFamily, lambda state, use_pallas: export_lm(state.params,
                                                       state.cfg))

@@ -1,19 +1,35 @@
 """Pallas TPU kernels for the compression chain — which kernel serves which
-pass (D→P→Q→E):
+pass (D→P→L→Q→E):
 
 ====================  =====================================================
 Pass / phase          Kernel
 ====================  =====================================================
 Q at inference        ``quant_matmul.py`` — W8A8 int8 MXU matmul, fused
-                      dequant(+bias+ReLU) epilogue (fc / exit heads)
+                      dequant(+bias+ReLU) epilogue; with ``out_scale`` the
+                      epilogue *requantizes* (int32 acc → static scale →
+                      int8 out), the primitive behind int8-resident serving
 Q at inference        ``quant_conv.py`` — NHWC conv lowered to int8 matmul
-                      tiles via im2col K-axis accumulation (conv layers)
+                      tiles via im2col K-axis accumulation (conv layers);
+                      im2col gather indices are lru-cached per geometry
+L∘Q at inference      ``lowrank_conv.py`` — a factored (u, v) conv pair in
+                      ONE launch: the rank-r intermediate lives in VMEM
+                      scratch (lane-padded when r < 128), requantized on a
+                      static grid, bit-exact with the chained pair
 Q during QAT          ``fake_quant.py`` — per-channel quantize→dequantize;
                       two-kernel amax→quantize, or ``fake_quant_fused``
                       (single HBM pass)
 E at decode           ``decode_attention.py`` — flash-decode (+int8-KV
                       variant) behind the early-exit serving loop
 ====================  =====================================================
+
+Int8-resident dataflow (core/export.py ``calibrate=...``): weight scales
+are static from export (PR 1); activation scales are static from a
+calibration batch, so no abs-max pass reads any activation at serve time.
+Kernel boundaries carry int8 — the requantize epilogue writes int8 to HBM
+and the next kernel consumes it with the producer's scale; fp32 appears
+only at the logit heads and the declared grouped-conv fallback.  The fused
+low-rank kernel is selected whenever the factored rank fits one 128 lane
+tile (``lowrank_conv.fits_fused``); wider ranks chain two launches.
 
 ``ops.py`` holds the jit'd public wrappers (interpret-mode on CPU, oracle
 fallbacks); ``ref.py`` the pure-jnp oracles every kernel is tested against;

@@ -1,0 +1,159 @@
+"""Fused low-rank conv kernel — a factored (u, v) conv pair in ONE Pallas
+launch (the serving realization of the chain's L∘Q composition).
+
+The 'L' pass (core/lowrank.py) splits a conv (KH,KW,CIN,COUT) into a
+spatial conv down to rank ``r`` ('u') chained with a 1x1 conv back up
+('v').  Served naively that is two kernel launches with an
+(B,OH,OW,r) int8 intermediate bouncing through HBM — and because the rank
+bottleneck usually has r < 128, the second matmul wastes most of each
+128-wide MXU tile on the K axis.  This kernel fuses the pair:
+
+    patches (M, K1) @ u_q (K1, Rp)   -> int32 acc     (K1 grid axis)
+    requantize(acc * sx*su + bu) / h_scale -> int8 h  (VMEM scratch only)
+    h (bm, Rp) @ v_q (Rp, N)         -> int32         (single MXU dot)
+    dequant + bias (+ReLU) (+requantize)              (epilogue)
+
+The r-dim intermediate lives entirely in VMEM scratch, zero-padded to the
+128 lane when r < 128 — padded u columns are zero int8, so the padded
+intermediate quantizes to exactly 0 and contributes nothing to the second
+matmul (padding is value-exact, and the whole launch is **bit-exact** with
+the chained quant_conv(u, out_scale=h_scale) → quant_conv(v) path: the
+int32 accumulation domains and the fp32 epilogue op order are identical).
+
+Grid is (M/bm, K1/bk); the COUT axis is served as one lane-padded block —
+v_q (Rp, Np), the scales and the (bm, Np) output tile all fit VMEM
+comfortably for CNN-scale widths (Np <= ~2048).  ``lowrank_conv`` asserts
+that budget instead of silently spilling; the layer-plan compiler
+(core/export.py) falls back to the chained path for larger layers or
+r > 128.
+
+All activation scales here are **static** Python floats captured at export
+calibration — no abs-max pass ever reads the activation tensor.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.quant_conv import im2col_nhwc
+from repro.kernels.tiling import fit_or_pad, pad_to
+
+# conservative VMEM ceiling for the non-gridded (Rp, Np)/(bm, Np) operands
+_VMEM_BYTES = 8 * 2 ** 20
+
+
+def fits_fused(r: int, cout: int, *, bm: int = 128) -> bool:
+    """Can a factored (u, v) pair with this rank/width serve as ONE launch?
+
+    True when the lane-padded rank fits a single 128-wide K tile (the
+    bit-exactness envelope) and the whole-COUT v block + output tile fit
+    the VMEM budget.  The layer-plan compiler (core/export.py) chains the
+    two kernels when this is False.
+    """
+    rp, np_ = pad_to(r), pad_to(cout)
+    return (rp <= 128 and rp <= _VMEM_BYTES // 4 // bm
+            and (rp * np_ + 4 * bm * np_) <= _VMEM_BYTES)
+
+
+def _lr_kernel(x_ref, u_ref, su_ref, bu_ref, v_ref, sv_ref, bv_ref, o_ref,
+               acc_ref, *, n_k, sx, h_scale, h_qmax, relu, out_scale,
+               out_qmax):
+    k = pl.program_id(1)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jax.lax.dot_general(
+        x_ref[...], u_ref[...], (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32)
+
+    @pl.when(k == n_k - 1)
+    def _done():
+        # u epilogue: dequant + bias, then static requantize to int8 — the
+        # same fp32 op order as quant_matmul's epilogue, so the fused and
+        # chained paths agree bit-for-bit.
+        h = acc_ref[...].astype(jnp.float32) * (sx * su_ref[...][None, :])
+        h = h + bu_ref[...][None, :]
+        h_q = jnp.clip(jnp.round(h / h_scale), -h_qmax - 1.0,
+                       h_qmax).astype(jnp.int8)
+        # v stage: the rank-dim matmul never leaves VMEM
+        acc2 = jax.lax.dot_general(
+            h_q, v_ref[...], (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.int32)
+        y = acc2.astype(jnp.float32) * (h_scale * sv_ref[...][None, :])
+        y = y + bv_ref[...][None, :]
+        if relu:
+            y = jnp.maximum(y, 0.0)
+        if out_scale is not None:
+            y = jnp.clip(jnp.round(y / out_scale), -out_qmax - 1.0, out_qmax)
+        o_ref[...] = y.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    'sx', 'h_scale', 'stride', 'relu', 'bm', 'bk', 'out_dtype', 'interpret',
+    'out_scale', 'h_qmax', 'out_qmax'))
+def lowrank_conv(x_q, u_q, v_q, su, sv, bu, bv, *, sx, h_scale, stride=1,
+                 relu=False, bm=128, bk=256, out_dtype=jnp.float32,
+                 interpret=False, out_scale=None, h_qmax=127.0,
+                 out_qmax=127.0):
+    """One-launch factored conv: x_q int8 (B,H,W,CIN) -> (B,OH,OW,COUT).
+
+    u_q int8 (KH,KW,CIN,R); v_q int8 (1,1,R,COUT) (or (R,COUT)); su (R,) /
+    sv (COUT,) static per-channel weight scales; bu (R,) / bv (COUT,) fp32
+    biases (pass zeros when absent).  ``sx`` / ``h_scale`` / ``out_scale``
+    are *static* Python floats: the input activation scale, the rank-
+    intermediate requantize scale, and (optionally) the int8 output scale.
+    """
+    B, H, W, C = x_q.shape
+    kh, kw, c2, r = u_q.shape
+    assert C == c2, (C, c2)
+    v_q = v_q.reshape(v_q.shape[-2], v_q.shape[-1])
+    r2, n = v_q.shape
+    assert r == r2, (r, r2)
+    patches, (oh, ow) = im2col_nhwc(x_q, kh, kw, stride)
+    m = B * oh * ow
+    k1 = kh * kw * C
+
+    (bm, mp), (bk, k1p) = fit_or_pad(bm, m), fit_or_pad(bk, k1)
+    rp, np_ = pad_to(r), pad_to(n)
+    assert rp <= _VMEM_BYTES // 4 // bm, (rp, bm)
+    assert (rp * np_ + 4 * bm * np_) <= _VMEM_BYTES, (rp, np_, bm)
+    if (mp, k1p) != (m, k1):
+        patches = jnp.pad(patches, ((0, mp - m), (0, k1p - k1)))
+    u2 = jnp.pad(u_q.reshape(k1, r), ((0, k1p - k1), (0, rp - r)))
+    v2 = jnp.pad(v_q, ((0, rp - r), (0, np_ - n)))
+    su = jnp.pad(su.astype(jnp.float32), (0, rp - r))
+    bu = jnp.pad(bu.astype(jnp.float32), (0, rp - r))
+    sv = jnp.pad(sv.astype(jnp.float32), (0, np_ - n))
+    bv = jnp.pad(bv.astype(jnp.float32), (0, np_ - n))
+
+    n_k = k1p // bk
+    grid = (mp // bm, n_k)
+    if out_scale is not None:
+        out_scale, out_dtype = float(out_scale), jnp.int8
+    out = pl.pallas_call(
+        functools.partial(_lr_kernel, n_k=n_k, sx=float(sx),
+                          h_scale=float(h_scale), h_qmax=float(h_qmax),
+                          relu=relu, out_scale=out_scale,
+                          out_qmax=float(out_qmax)),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, k: (i, k)),
+            pl.BlockSpec((bk, rp), lambda i, k: (k, 0)),
+            pl.BlockSpec((rp,), lambda i, k: (0,)),
+            pl.BlockSpec((rp,), lambda i, k: (0,)),
+            pl.BlockSpec((rp, np_), lambda i, k: (0, 0)),
+            pl.BlockSpec((np_,), lambda i, k: (0,)),
+            pl.BlockSpec((np_,), lambda i, k: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bm, np_), lambda i, k: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), out_dtype),
+        scratch_shapes=[pltpu.VMEM((bm, rp), jnp.int32)],
+        interpret=interpret,
+    )(patches, u2, su, bu, v2, sv, bv)
+    return out[:m, :n].reshape(B, oh, ow, n)

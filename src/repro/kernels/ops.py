@@ -11,7 +11,16 @@ Serving entry points (consumed by core/export.py):
 * :func:`prequantize_weight` — per-out-channel weight int8 quantization,
   run ONCE at export; the returned (w_q, sw) are static at serve time.
 * :func:`quant_dense` / :func:`quant_conv_nhwc` — dynamic activation
-  quantization + the int8 Pallas matmul/conv kernels with fused epilogue.
+  quantization + the int8 Pallas matmul/conv kernels with fused epilogue
+  (the PR-1 exported path: one abs-max pass per layer, fp32 between
+  layers).
+* :func:`quant_conv_static` / :func:`quant_dense_static` /
+  :func:`lowrank_conv_nhwc` — the int8-resident path: activations arrive
+  already int8 on a *static* scale captured at export calibration, and the
+  requantize epilogue (``out_scale``) keeps them int8 on the way out.
+  ``lowrank_conv_nhwc`` serves a factored (u, v) conv pair as ONE Pallas
+  launch (kernels/lowrank_conv.py); its jnp fallback chains the two convs
+  with identical requantize math.
 """
 from __future__ import annotations
 
@@ -22,6 +31,7 @@ from repro.kernels import ref
 from repro.kernels.decode_attention import decode_attention as _pallas_decode
 from repro.kernels.fake_quant import fake_quant as _pallas_fake_quant
 from repro.kernels.fake_quant import fake_quant_fused as _pallas_fq_fused
+from repro.kernels.lowrank_conv import lowrank_conv as _pallas_lr_conv
 from repro.kernels.quant_conv import quant_conv as _pallas_qconv
 from repro.kernels.quant_matmul import quant_matmul as _pallas_qmm
 
@@ -148,3 +158,62 @@ def quant_conv_nhwc(x, w_q, sw, bias=None, *, stride=1, groups=1, relu=False,
                                   relu=relu)
     return _pallas_qconv(xq, w_q, sx, sw, bias, stride=stride, relu=relu,
                          interpret=_interpret(), **kw)
+
+
+# ------------------------------------------- int8-resident serving entries
+
+
+def quant_conv_static(x_q, w_q, sw, bias=None, *, sx, stride=1, relu=False,
+                      out_scale=None, out_qmax=127.0, use_pallas=True, **kw):
+    """Int8 conv on an *already-quantized* activation with a static scale.
+
+    x_q int8 (B,H,W,CIN) on the static per-tensor grid ``sx`` (a Python
+    float from export calibration); no abs-max pass runs.  With
+    ``out_scale`` the output is int8 on that static grid — the layer is
+    int8-in/int8-out in HBM.
+    """
+    if not use_pallas:
+        return ref.quant_conv_ref(x_q, w_q, sx, sw, bias, stride=stride,
+                                  relu=relu, out_scale=out_scale,
+                                  out_qmax=out_qmax)
+    return _pallas_qconv(x_q, w_q, sx, sw, bias, stride=stride, relu=relu,
+                         out_scale=out_scale, out_qmax=out_qmax,
+                         interpret=_interpret(), **kw)
+
+
+def quant_dense_static(x_q, w_q, sw, bias=None, *, sx, relu=False,
+                       out_scale=None, out_qmax=127.0, use_pallas=True, **kw):
+    """Int8 dense on a statically-quantized activation (cf.
+    :func:`quant_conv_static`).  x_q int8 (M,K); returns fp32 (M,N), or
+    int8 when ``out_scale`` is set."""
+    if not use_pallas:
+        y = ref.quant_matmul_ref(x_q, w_q,
+                                 jnp.full((x_q.shape[0],), sx, jnp.float32),
+                                 sw.reshape(-1))
+        if bias is not None:
+            y = y + bias.astype(jnp.float32)
+        if relu:
+            y = jnp.maximum(y, 0.0)
+        if out_scale is not None:
+            return ref.requantize(y, out_scale, out_qmax)
+        return y
+    return _pallas_qmm(x_q, w_q, jnp.full((x_q.shape[0],), sx, jnp.float32),
+                       sw.reshape(-1), bias, relu=relu, out_scale=out_scale,
+                       out_qmax=out_qmax, interpret=_interpret(), **kw)
+
+
+def lowrank_conv_nhwc(x_q, u_q, v_q, su, sv, bu, bv, *, sx, h_scale,
+                      stride=1, relu=False, out_scale=None, h_qmax=127.0,
+                      out_qmax=127.0, use_pallas=True, **kw):
+    """Serve a factored (u, v) conv pair — ONE Pallas launch on the kernel
+    path (kernels/lowrank_conv.py: the rank intermediate never leaves
+    VMEM), or the chained jnp reference with identical requantize math."""
+    if not use_pallas:
+        return ref.lowrank_conv_ref(x_q, u_q, v_q, su, sv, bu, bv, sx=sx,
+                                    h_scale=h_scale, stride=stride,
+                                    relu=relu, out_scale=out_scale,
+                                    h_qmax=h_qmax, out_qmax=out_qmax)
+    return _pallas_lr_conv(x_q, u_q, v_q, su, sv, bu, bv, sx=float(sx),
+                           h_scale=float(h_scale), stride=stride, relu=relu,
+                           out_scale=out_scale, h_qmax=h_qmax,
+                           out_qmax=out_qmax, interpret=_interpret(), **kw)

@@ -16,6 +16,13 @@ matmul K axis is the im2col patch axis.
 Awkward dims (primes, non-128 multiples with no decent divisor) are
 zero-padded to the next 128 multiple and sliced back — zero int8 rows/cols
 contribute nothing to the int32 accumulator, so padding is value-exact.
+
+``out_scale`` turns the epilogue into a **requantize** epilogue: after the
+fused dequant(+bias)(+ReLU) the result is divided by a *static* output
+scale, rounded, clipped to ``out_qmax`` and written as int8 — the int8-
+resident serving path (core/export.py) uses this so activations stay int8
+in HBM between layers; the next kernel consumes them with the same static
+scale, so no per-call abs-max pass ever touches the activation tensor.
 """
 from __future__ import annotations
 
@@ -29,7 +36,7 @@ from jax.experimental.pallas import tpu as pltpu
 from repro.kernels.tiling import fit_or_pad
 
 
-def _qmm_kernel(*refs, n_k, relu, has_bias):
+def _qmm_kernel(*refs, n_k, relu, has_bias, out_scale, out_qmax):
     if has_bias:
         x_ref, w_ref, sx_ref, sw_ref, b_ref, o_ref, acc_ref = refs
     else:
@@ -52,21 +59,32 @@ def _qmm_kernel(*refs, n_k, relu, has_bias):
             y = y + b_ref[...][None, :]
         if relu:
             y = jnp.maximum(y, 0.0)
+        if out_scale is not None:   # requantize epilogue: int8 stays in HBM
+            y = jnp.clip(jnp.round(y / out_scale), -out_qmax - 1.0, out_qmax)
         o_ref[...] = y.astype(o_ref.dtype)
 
 
 @functools.partial(jax.jit, static_argnames=('bm', 'bn', 'bk', 'out_dtype',
-                                             'relu', 'interpret'))
+                                             'relu', 'interpret', 'out_scale',
+                                             'out_qmax'))
 def quant_matmul(x_q, w_q, sx, sw, bias=None, *, bm=128, bn=128, bk=256,
-                 out_dtype=jnp.float32, relu=False, interpret=False):
+                 out_dtype=jnp.float32, relu=False, interpret=False,
+                 out_scale=None, out_qmax=127.0):
     """x_q: int8 (M,K); w_q: int8 (K,N); sx: (M,) fp32; sw: (N,) fp32.
 
     Optional fused epilogue: ``bias`` (N,) fp32 added after dequant, then
     ReLU when ``relu=True``.  Returns (M, N) ``out_dtype``.
+
+    ``out_scale`` (static Python float) switches the epilogue to requantize:
+    the fp32 result is divided by it, rounded and clipped to ``out_qmax``,
+    and the output is int8 (``out_dtype`` is ignored) — the next layer
+    consumes it directly with the same static scale.
     """
     M, K = x_q.shape
     K2, N = w_q.shape
     assert K == K2
+    if out_scale is not None:
+        out_scale, out_dtype = float(out_scale), jnp.int8
     (bm, Mp), (bn, Np), (bk, Kp) = (fit_or_pad(bm, M), fit_or_pad(bn, N),
                                     fit_or_pad(bk, K))
     if (Mp, Np, Kp) != (M, N, K):
@@ -90,7 +108,8 @@ def quant_matmul(x_q, w_q, sx, sw, bias=None, *, bm=128, bn=128, bk=256,
         args.append(bias.astype(jnp.float32))
     out = pl.pallas_call(
         functools.partial(_qmm_kernel, n_k=n_k, relu=relu,
-                          has_bias=bias is not None),
+                          has_bias=bias is not None,
+                          out_scale=out_scale, out_qmax=float(out_qmax)),
         grid=grid,
         in_specs=in_specs,
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),

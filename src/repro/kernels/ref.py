@@ -5,6 +5,17 @@ import jax
 import jax.numpy as jnp
 
 
+def requantize(y, out_scale, qmax=127.0):
+    """Static requantize: fp32 -> int8 on the ``out_scale`` grid.
+
+    The jnp realization of the kernels' requantize epilogue — same op order
+    (divide, round, clip, cast), so ref and Pallas paths agree bit-for-bit
+    given bit-equal fp32 inputs.
+    """
+    return jnp.clip(jnp.round(y / out_scale), -qmax - 1.0,
+                    qmax).astype(jnp.int8)
+
+
 def quant_matmul_ref(x_q, w_q, sx, sw, out_dtype=jnp.float32):
     """int8 x (M,K) @ int8 w (K,N), per-row sx (M,), per-col sw (N,)."""
     acc = jnp.einsum('mk,kn->mn', x_q.astype(jnp.int32), w_q.astype(jnp.int32),
@@ -21,13 +32,15 @@ def fake_quant_ref(w, bits: int):
 
 
 def quant_conv_ref(x_q, w_q, sx, sw, bias=None, *, stride=1, relu=False,
-                   groups=1, out_dtype=jnp.float32):
+                   groups=1, out_dtype=jnp.float32, out_scale=None,
+                   out_qmax=127.0):
     """lax.conv oracle for kernels/quant_conv.quant_conv.
 
     Dequantizes both operands and runs the SAME-padded fp32 conv — the conv
     is bilinear, so this equals the int8-accumulate + epilogue-rescale path
     up to fp32 rounding.  x_q int8 NHWC, w_q int8 HWIO, sx scalar, sw
-    (COUT,).
+    (COUT,).  ``out_scale`` mirrors the kernels' requantize epilogue
+    (int8 output on a static grid).
     """
     x = x_q.astype(jnp.float32) * jnp.asarray(sx, jnp.float32)
     w = w_q.astype(jnp.float32) * sw.astype(jnp.float32)[None, None, None, :]
@@ -38,7 +51,24 @@ def quant_conv_ref(x_q, w_q, sx, sw, bias=None, *, stride=1, relu=False,
         y = y + bias.astype(jnp.float32)
     if relu:
         y = jnp.maximum(y, 0.0)
+    if out_scale is not None:
+        return requantize(y, out_scale, out_qmax)
     return y.astype(out_dtype)
+
+
+def lowrank_conv_ref(x_q, u_q, v_q, su, sv, bu, bv, *, sx, h_scale, stride=1,
+                     relu=False, out_scale=None, h_qmax=127.0,
+                     out_qmax=127.0):
+    """Chained two-conv oracle for kernels/lowrank_conv.lowrank_conv: the
+    u conv requantizes its output to int8 on the static ``h_scale`` grid
+    (exactly what the fused kernel does to its VMEM intermediate), then the
+    1x1 v conv applies the ordinary dequant(+bias)(+ReLU)(+requantize)
+    epilogue."""
+    v_q = v_q.reshape(1, 1, v_q.shape[-2], v_q.shape[-1])
+    h_q = quant_conv_ref(x_q, u_q, sx, su, bu, stride=stride,
+                         out_scale=h_scale, out_qmax=h_qmax)
+    return quant_conv_ref(h_q, v_q, h_scale, sv, bv, relu=relu,
+                          out_scale=out_scale, out_qmax=out_qmax)
 
 
 def decode_attention_ref(q, k, v, valid):

@@ -36,6 +36,9 @@ def main():
                     help='QAT fine-tune steps before export (0 = raw init)')
     ap.add_argument('--pallas', action='store_true',
                     help='force Pallas kernels (interpret mode on CPU)')
+    ap.add_argument('--resident', action='store_true',
+                    help='int8-resident plan: calibrate static activation '
+                         'scales on the first eval batch (core/export.py)')
     args = ap.parse_args()
 
     fam = CNNFamily(SyntheticImages())
@@ -48,8 +51,14 @@ def main():
         trainer = Trainer(batch=args.batch, steps=args.steps)
         params, _ = trainer.fit(fam, cfg, params)
 
-    model = export_cnn(params, cfg, use_pallas=True if args.pallas else None)
     stream = fam.eval_batches(args.batches, args.batch)
+    model = export_cnn(params, cfg, use_pallas=True if args.pallas else None,
+                       calibrate=stream[0][0] if args.resident else None)
+    if args.resident:
+        s = model.summary()
+        print(f'layer plan: {s["kernel_launches"]} kernel launches, '
+              f'{s["n_fused_lowrank"]} fused low-rank, '
+              f'fallback MACs {s["fallback_mac_fraction"]:.1%}')
     # warm the jit caches off the clock
     model.serve_early_exit(stream[0][0], threshold=args.threshold)
 

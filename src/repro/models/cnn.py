@@ -26,17 +26,20 @@ def _conv_init(key, kh, kw, cin, cout, dtype=jnp.float32):
             'b': jnp.zeros((cout,), dtype)}
 
 
-def conv(p, x, *, stride=1, quant=(0, 0), groups=1):
+def conv(p, x, *, stride=1, quant=(0, 0), groups=1, name=None):
     """QAT/fp32 conv: per-call fake-quant hooks on weight and activation.
 
     This is the *training* path.  The serving path (core/export.py) swaps
     this out via cnn_forward's ``conv_fn`` for an int8 Pallas conv with
-    static, export-time weight scales.
+    static, export-time weight scales.  ``name`` is the stable layer name
+    cnn_forward threads through (ignored here; the export layer-plan
+    compiler keys its static-scale plan by it).
 
     A low-rank-factored conv (core/family.py factorize: {'u': spatial conv
     to rank r, 'v': 1x1 conv back up}) chains the two sub-convs; each gets
     its own fake-quant hooks, matching the exported int8 path.
     """
+    del name
     if 'u' in p:
         h = conv(p['u'], x, stride=stride, quant=quant, groups=groups)
         return conv(p['v'], h, quant=quant)
@@ -82,7 +85,8 @@ def _fc_init(key, din, dout, dtype=jnp.float32):
             'b': jnp.zeros((dout,), dtype)}
 
 
-def fc(p, x, *, quant=(0, 0)):
+def fc(p, x, *, quant=(0, 0), name=None):
+    del name
     if 'u' in p:                   # low-rank factored: two chained matmuls
         return fc(p['v'], fc(p['u'], x, quant=quant), quant=quant)
     w_bits, a_bits = quant
@@ -142,58 +146,94 @@ def init_cnn(key, cfg):
 # -------------------------------------------------------------------- forward
 
 
-def _block_forward(blk, x, kind, stride, quant, expand_ratio, conv_fn):
+_ACTS = {None: lambda x: x, 'relu': jax.nn.relu, 'relu6': jax.nn.relu6}
+
+
+def norm_act(p, y, *, act=None, skip=None, name=None):
+    """The inter-layer glue: GroupNorm -> (+skip) -> activation, fp32.
+
+    Every tensor that travels between conv layers goes through exactly one
+    ``glue_fn`` call — which is why core/export.py can swap this for an
+    int8-resident version (dequantize in-register, norm/act in fp32
+    registers, requantize to the next layer's static scale) and know that
+    no activation reaches HBM in fp32.  ``name`` keys the export plan.
+    """
+    del name
+    h = group_norm(p, y)
+    if skip is not None:
+        h = h + skip
+    return _ACTS[act](h)
+
+
+def global_pool(x):
+    """Global average pool (B,H,W,C) -> (B,C) ahead of fc/exit heads."""
+    return x.mean(axis=(1, 2))
+
+
+def _block_forward(blk, x, kind, stride, quant, conv_fn, glue_fn,
+                   name=''):
     if kind == 'resnet':
-        h = jax.nn.relu(group_norm(blk['n1'],
-                                   conv_fn(blk['conv1'], x, stride=stride,
-                                           quant=quant)))
-        h = group_norm(blk['n2'], conv_fn(blk['conv2'], h, quant=quant))
-        skip = conv_fn(blk['proj'], x, stride=stride, quant=quant) \
-            if 'proj' in blk else x
-        return jax.nn.relu(h + skip)
+        h = glue_fn(blk['n1'],
+                    conv_fn(blk['conv1'], x, stride=stride, quant=quant,
+                            name=f'{name}.conv1'),
+                    act='relu', name=f'{name}.n1')
+        y = conv_fn(blk['conv2'], h, quant=quant, name=f'{name}.conv2')
+        skip = conv_fn(blk['proj'], x, stride=stride, quant=quant,
+                       name=f'{name}.proj') if 'proj' in blk else x
+        return glue_fn(blk['n2'], y, act='relu', skip=skip,
+                       name=f'{name}.n2')
     if kind == 'vgg':
-        h = jax.nn.relu(group_norm(blk['n1'],
-                                   conv_fn(blk['conv1'], x, stride=stride,
-                                           quant=quant)))
-        return h
+        return glue_fn(blk['n1'],
+                       conv_fn(blk['conv1'], x, stride=stride, quant=quant,
+                               name=f'{name}.conv1'),
+                       act='relu', name=f'{name}.n1')
     # mobilenet
     e = out_channels(blk['expand'])
-    h = jax.nn.relu6(group_norm(blk['n1'],
-                                conv_fn(blk['expand'], x, quant=quant)))
-    h = jax.nn.relu6(group_norm(blk['n2'],
-                                conv_fn(blk['dw'], h, stride=stride,
-                                        quant=quant, groups=e)))
-    h = group_norm(blk['n3'], conv_fn(blk['project'], h, quant=quant))
-    if stride == 1 and x.shape[-1] == h.shape[-1]:
-        h = h + x
-    return h
+    h = glue_fn(blk['n1'], conv_fn(blk['expand'], x, quant=quant,
+                                   name=f'{name}.expand'),
+                act='relu6', name=f'{name}.n1')
+    h = glue_fn(blk['n2'], conv_fn(blk['dw'], h, stride=stride, quant=quant,
+                                   groups=e, name=f'{name}.dw'),
+                act='relu6', name=f'{name}.n2')
+    skip = x if (stride == 1
+                 and x.shape[-1] == out_channels(blk['project'])) else None
+    return glue_fn(blk['n3'], conv_fn(blk['project'], h, quant=quant,
+                                      name=f'{name}.project'),
+                   skip=skip, name=f'{name}.n3')
 
 
 def cnn_forward(params, cfg, x, *, collect_exits=False, conv_fn=None,
-                fc_fn=None):
+                fc_fn=None, glue_fn=None, pool_fn=None):
     """x: (B, H, W, C) -> logits (B, classes); optionally exit logits dict.
 
-    ``conv_fn``/``fc_fn`` inject the layer implementation: the default is
-    the QAT fake-quant path (:func:`conv`/:func:`fc`); core/export.py
-    injects int8 serving layers over the same topology, so training and
-    serving cannot drift structurally.
+    ``conv_fn``/``fc_fn``/``glue_fn``/``pool_fn`` inject the layer
+    implementations: the default is the QAT fake-quant path
+    (:func:`conv`/:func:`fc`/:func:`norm_act`/:func:`global_pool`);
+    core/export.py injects int8 serving layers over the same topology, so
+    training and serving cannot drift structurally.  Each call site carries
+    a stable ``name`` (``s{stage}b{block}.conv1`` etc.) so the export
+    layer-plan compiler can attach per-layer static activation scales.
     """
     conv_fn = conv_fn or conv
     fc_fn = fc_fn or fc
+    glue_fn = glue_fn or norm_act
+    pool_fn = pool_fn or global_pool
     quant = (cfg.w_bits, cfg.a_bits)
-    h = jax.nn.relu(group_norm(params['stem_norm'],
-                               conv_fn(params['stem'], x, quant=quant)))
+    h = glue_fn(params['stem_norm'],
+                conv_fn(params['stem'], x, quant=quant, name='stem'),
+                act='relu', name='stem.norm')
     exits = {}
     for s, blocks in enumerate(params['stages']):
         for b, blk in enumerate(blocks):
             stride = 2 if (b == 0 and s > 0) else 1
-            h = _block_forward(blk, h, cfg.kind, stride, quant,
-                               cfg.expand_ratio, conv_fn)
+            h = _block_forward(blk, h, cfg.kind, stride, quant, conv_fn,
+                               glue_fn, name=f's{s}b{b}')
         if collect_exits and 'exits' in params and str(s) in params['exits']:
-            feat = h.mean(axis=(1, 2))
-            exits[s] = fc_fn(params['exits'][str(s)], feat, quant=quant)
-    feat = h.mean(axis=(1, 2))
-    logits = fc_fn(params['head'], feat, quant=quant)
+            feat = pool_fn(h)
+            exits[s] = fc_fn(params['exits'][str(s)], feat, quant=quant,
+                             name=f'exit{s}')
+    feat = pool_fn(h)
+    logits = fc_fn(params['head'], feat, quant=quant, name='head')
     if collect_exits:
         return logits, exits
     return logits

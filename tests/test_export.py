@@ -1,6 +1,9 @@
 """Export-and-serve subsystem tests: the compiled int8 path must match the
 fake-quant QAT oracle, compute no per-call weight scales, and the new
-quant_conv kernel must match its lax.conv oracle in interpret mode."""
+quant_conv kernel must match its lax.conv oracle in interpret mode.
+The int8-resident plan (``calibrate=...``) additionally must keep
+inter-layer activations int8 at every kernel boundary, never run an
+activation abs-max, and serve factored conv pairs as single launches."""
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -167,6 +170,171 @@ def test_export_factored_pallas_matches_jnp_path():
     np.testing.assert_allclose(np.asarray(m_pls.serve(x)),
                                np.asarray(m_ref.serve(x)),
                                rtol=1e-4, atol=1e-4)
+
+
+# --------------------------------------------------- int8-resident serving
+
+
+def _walk_eqns(jaxpr):
+    for eqn in jaxpr.eqns:
+        yield eqn
+        for v in eqn.params.values():
+            if hasattr(v, 'jaxpr'):
+                yield from _walk_eqns(v.jaxpr)
+            elif hasattr(v, 'eqns'):
+                yield from _walk_eqns(v)
+
+
+def _prim_count(jaxpr, name):
+    return sum(1 for e in _walk_eqns(jaxpr) if e.primitive.name == name)
+
+
+@pytest.mark.parametrize('kind', sorted(CONFIGS))
+def test_export_resident_matches_fake_quant_oracle(kind):
+    """The int8-resident plan (static scales, requantize epilogues) tracks
+    the fake-quant oracle.  Looser tolerance than the dynamic path: the
+    resident graph quantizes conv *outputs* too (that is what keeps them
+    int8 in HBM), one extra rounding per layer."""
+    _, params, cfg = _with_exits(CONFIGS[kind])
+    x = jax.random.normal(jax.random.key(1), (8, 32, 32, 3))
+    oracle, oracle_exits = jax.jit(
+        lambda p, x: cnn_forward(p, cfg, x, collect_exits=True))(params, x)
+    model = export_cnn(params, cfg, calibrate=x)
+    served, served_exits = model.fn_exits(model.params, x)
+    scale = float(jnp.max(jnp.abs(oracle)))
+    np.testing.assert_allclose(np.asarray(served), np.asarray(oracle),
+                               atol=6e-2 * max(scale, 1.0))
+    assert set(served_exits) == set(oracle_exits)
+    assert model.summary()['n_layers'] > 0
+
+
+def test_export_resident_pallas_matches_jnp_path():
+    """Interpret-mode Pallas resident serving tracks the jnp resident
+    serving.  The backends share every *inter-layer* static grid but differ
+    by design inside a layer: Pallas kernels requantize their outputs at
+    the HBM boundary, the CPU lowering carries fp32 from conv to its own
+    glue (no int8 conv units to feed) — so parity is within per-layer
+    quantization noise, not bit-exact."""
+    cfg = RESNET8_CIFAR.replace(w_bits=8, a_bits=8)
+    params = init_cnn(jax.random.key(0), cfg)
+    x = jax.random.normal(jax.random.key(1), (2, 16, 16, 3))
+    m_ref = export_cnn(params, cfg, use_pallas=False, calibrate=x)
+    m_pls = export_cnn(params, cfg, use_pallas=True, calibrate=x)
+    ref_out = np.asarray(m_ref.serve(x))
+    scale = float(np.max(np.abs(ref_out)))
+    np.testing.assert_allclose(np.asarray(m_pls.serve(x)), ref_out,
+                               atol=4e-2 * max(scale, 1.0))
+
+
+def test_export_resident_no_dynamic_activation_scales():
+    """The resident jaxpr contains ZERO reduce_max ops — no activation
+    abs-max ever runs at serve time (weight scales were already static;
+    now activation scales are too).  The dynamic path runs one per layer."""
+    cfg = RESNET8_CIFAR.replace(w_bits=8, a_bits=8)
+    params = init_cnn(jax.random.key(0), cfg)
+    x = jax.random.normal(jax.random.key(1), (2, 32, 32, 3))
+
+    m_dyn = export_cnn(params, cfg)
+    m_res = export_cnn(params, cfg, calibrate=x)
+    dyn = jax.make_jaxpr(lambda x: m_dyn.fn(m_dyn.params, x))(x)
+    res = jax.make_jaxpr(lambda x: m_res.fn(m_res.params, x))(x)
+    assert _prim_count(dyn.jaxpr, 'reduce_max') > 0
+    assert _prim_count(res.jaxpr, 'reduce_max') == 0
+
+    before = quant_lib.WEIGHT_SCALE_COMPUTATIONS[0]
+    jax.make_jaxpr(lambda x: m_res.fn(m_res.params, x))(x)
+    assert quant_lib.WEIGHT_SCALE_COMPUTATIONS[0] == before
+
+
+@pytest.mark.parametrize('kind', sorted(CONFIGS))
+def test_export_resident_int8_at_kernel_boundaries(kind):
+    """Dtype-trace the resident Pallas serving fn: every kernel consumes
+    int8 activations and every kernel output is int8, except the fp32
+    logit heads (head + exit fcs) and the declared grouped-conv fallback
+    layers (counted against the plan)."""
+    _, params, cfg = _with_exits(CONFIGS[kind])
+    x = jax.random.normal(jax.random.key(1), (2, 32, 32, 3))
+    model = export_cnn(params, cfg, use_pallas=True, calibrate=x)
+    jaxpr = jax.make_jaxpr(
+        lambda p, x: model.fn_exits(p, x))(model.params, x)
+    calls = [e for e in _walk_eqns(jaxpr.jaxpr)
+             if e.primitive.name == 'pallas_call']
+    assert calls, 'resident export must route through Pallas kernels'
+    for e in calls:
+        assert e.invars[0].aval.dtype == jnp.int8   # int8 activations in
+    out_dtypes = [v.aval.dtype for e in calls for v in e.outvars]
+    n_fp32 = sum(1 for d in out_dtypes if d == jnp.float32)
+    n_heads = 1 + len(model.cfg.exit_stages)        # final + exit logits
+    assert n_fp32 == n_heads, (n_fp32, n_heads)
+    assert all(d in (jnp.int8, jnp.float32) for d in out_dtypes)
+    # declared fallbacks are the only fp32 convs left in the graph
+    n_fallback_convs = sum(
+        1 for e in _walk_eqns(jaxpr.jaxpr)
+        if e.primitive.name == 'conv_general_dilated'
+        and e.outvars[0].aval.dtype == jnp.float32)
+    assert n_fallback_convs == model.summary()['n_fallback']
+
+
+def test_export_resident_factored_single_launch():
+    """A factored (u, v) conv layer serves as exactly ONE Pallas launch in
+    the resident plan; total pallas_call count matches the plan's
+    kernel-launch accounting."""
+    cfg = RESNET8_CIFAR.replace(w_bits=8, a_bits=8)
+    fam = CNNFamily(SyntheticImages())
+    params = fam.init(jax.random.key(0), cfg)
+    params, _, _ = fam.factorize(params, cfg, energy=0.6, min_rank=2)
+    x = jax.random.normal(jax.random.key(1), (2, 16, 16, 3))
+    model = export_cnn(params, cfg, use_pallas=True, calibrate=x)
+    s = model.summary()
+    assert s['n_fused_lowrank'] > 0
+    jaxpr = jax.make_jaxpr(lambda p, x: model.fn(p, x))(model.params, x)
+    assert _prim_count(jaxpr.jaxpr, 'pallas_call') == s['kernel_launches']
+    # exit-head launches are accounted separately: fn excludes them,
+    # fn_exits adds exactly that many
+    fam2, eparams, ecfg = _with_exits(RESNET8_CIFAR)
+    em = export_cnn(eparams, ecfg, use_pallas=True, calibrate=x)
+    es = em.summary()
+    assert es['n_exit_heads'] == len(ecfg.exit_stages) > 0
+    jx_fn = jax.make_jaxpr(lambda p, x: em.fn(p, x))(em.params, x)
+    jx_ex = jax.make_jaxpr(lambda p, x: em.fn_exits(p, x))(em.params, x)
+    assert _prim_count(jx_fn.jaxpr, 'pallas_call') == es['kernel_launches']
+    assert _prim_count(jx_ex.jaxpr, 'pallas_call') == \
+        es['kernel_launches'] + es['exit_head_launches']
+    # and the oracle still holds through the fused kernels
+    oracle = jax.jit(lambda p, x: cnn_forward(p, cfg, x))(params, x)
+    served = export_cnn(params, cfg, use_pallas=False, calibrate=x).serve(x)
+    scale = float(jnp.max(jnp.abs(oracle)))
+    np.testing.assert_allclose(np.asarray(served), np.asarray(oracle),
+                               atol=6e-2 * max(scale, 1.0))
+
+
+def test_export_resident_fallback_mac_fraction():
+    """Mobilenet's depthwise convs stay on the declared fp32 fallback; the
+    plan summary makes their MAC share explicit (and nonzero)."""
+    cfg = MOBILENET_SMALL_CIFAR.replace(w_bits=8, a_bits=8)
+    params = init_cnn(jax.random.key(0), cfg)
+    x = jax.random.normal(jax.random.key(1), (2, 32, 32, 3))
+    s = export_cnn(params, cfg, calibrate=x).summary()
+    assert s['n_fallback'] > 0
+    assert 0.0 < s['fallback_mac_fraction'] < 1.0
+    # resnet has no grouped convs: fraction must be exactly zero
+    cfg_r = RESNET8_CIFAR.replace(w_bits=8, a_bits=8)
+    s_r = export_cnn(init_cnn(jax.random.key(0), cfg_r), cfg_r,
+                     calibrate=x).summary()
+    assert s_r['fallback_mac_fraction'] == 0.0
+
+
+def test_export_chain_threads_exit_threshold():
+    """export_chain hands the E pass's calibrated operating point to the
+    served model, so batch serving exercises ChainState.exit_threshold."""
+    fam, params, cfg = _with_exits(RESNET8_CIFAR)
+    st = ChainState(family=fam, cfg=cfg, params=params,
+                    key=jax.random.key(0), exit_threshold=0.42)
+    model = export_chain(st)
+    assert model.exit_threshold == 0.42
+    x = jax.random.normal(jax.random.key(3), (4, 32, 32, 3))
+    pred, stage = model.serve_early_exit(x)     # None -> chain threshold
+    assert pred.shape == (4,) and stage.shape == (4,)
 
 
 # ------------------------------------------------------- batched early exit

@@ -1,0 +1,128 @@
+"""Fused low-rank conv kernel tests: one Pallas launch for a factored
+(u, v) conv pair, bit-exact with the chained two-launch int8-resident path
+(shared int32 accumulation domain + identical fp32 epilogue op order), and
+matching the fp32 lax.conv reference on dequantized operands.
+
+Ranks exercised: r=1 and r=7 (prime — both force zero-padding of the rank
+dim to the 128 lane, which must be value-exact), and r=128 (a full MXU
+tile, no padding)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+from repro.kernels.lowrank_conv import fits_fused, lowrank_conv
+from repro.kernels.quant_conv import quant_conv
+
+
+def _factored_case(r, cin=16, cout=32, seed=0):
+    k = jax.random.key(seed)
+    x = jax.random.normal(k, (2, 8, 8, cin))
+    u = jax.random.normal(jax.random.fold_in(k, 1), (3, 3, cin, r)) * 0.1
+    v = jax.random.normal(jax.random.fold_in(k, 2), (1, 1, r, cout)) * 0.1
+    bu = jax.random.normal(jax.random.fold_in(k, 3), (r,)) * 0.1
+    bv = jax.random.normal(jax.random.fold_in(k, 4), (cout,)) * 0.1
+    u_q, su = ops.prequantize_weight(u)
+    v_q, sv = ops.prequantize_weight(v)
+    x_q, sx = ops.quantize_act(x)
+    return x_q, u_q, v_q, su, sv, bu, bv, float(sx)
+
+
+@pytest.mark.parametrize('r', [1, 7, 128])
+@pytest.mark.parametrize('stride,relu,out_scale', [(1, False, None),
+                                                   (2, True, 0.031)])
+def test_fused_bit_exact_with_two_launch_path(r, stride, relu, out_scale):
+    """ONE fused launch == quant_conv(u, out_scale=h) -> quant_conv(v),
+    bit-for-bit: same int32 accumulators, same requantized intermediate,
+    same epilogue — for fp32 and int8 (requantize) outputs alike."""
+    x_q, u_q, v_q, su, sv, bu, bv, sx = _factored_case(r)
+    h_scale = 0.05
+    fused = lowrank_conv(x_q, u_q, v_q, su, sv, bu, bv, sx=sx,
+                         h_scale=h_scale, stride=stride, relu=relu,
+                         out_scale=out_scale, interpret=True)
+    h = quant_conv(x_q, u_q, sx, su, bu, stride=stride, out_scale=h_scale,
+                   interpret=True)
+    chained = quant_conv(h, v_q, h_scale, sv, bv, relu=relu,
+                         out_scale=out_scale, interpret=True)
+    assert fused.dtype == (jnp.int8 if out_scale else jnp.float32)
+    assert fused.shape == chained.shape
+    np.testing.assert_array_equal(np.asarray(fused), np.asarray(chained))
+
+
+@pytest.mark.parametrize('r', [1, 7, 128])
+def test_fused_matches_fp32_lax_conv_reference(r):
+    """Fused kernel tracks the fp32 conv chain on dequantized operands
+    (conv-of-dequant == dequant-of-int32-accum up to the requantized
+    intermediate's grid)."""
+    x_q, u_q, v_q, su, sv, bu, bv, sx = _factored_case(r)
+    h_scale = 0.05
+    fused = lowrank_conv(x_q, u_q, v_q, su, sv, bu, bv, sx=sx,
+                         h_scale=h_scale, interpret=True)
+    x = x_q.astype(jnp.float32) * sx
+    u = u_q.astype(jnp.float32) * su[None, None, None, :]
+    h = jax.lax.conv_general_dilated(
+        x, u, (1, 1), 'SAME', dimension_numbers=('NHWC', 'HWIO', 'NHWC'))
+    h = h + bu
+    # the fused kernel quantizes the rank intermediate to the static grid
+    h = jnp.clip(jnp.round(h / h_scale), -128, 127) * h_scale
+    v = v_q.astype(jnp.float32) * sv[None, None, None, :]
+    expect = jax.lax.conv_general_dilated(
+        h, v, (1, 1), 'SAME', dimension_numbers=('NHWC', 'HWIO', 'NHWC'))
+    expect = expect + bv
+    np.testing.assert_allclose(np.asarray(fused), np.asarray(expect),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_fused_equals_ref_fallback():
+    """ops.lowrank_conv_nhwc: Pallas (interpret) and the jnp reference
+    fallback produce identical int8 outputs — the CPU serving path and the
+    TPU kernel sit on the same requantize grids."""
+    x_q, u_q, v_q, su, sv, bu, bv, sx = _factored_case(7)
+    kw = dict(sx=sx, h_scale=0.05, stride=1, relu=True, out_scale=0.02)
+    a = ops.lowrank_conv_nhwc(x_q, u_q, v_q, su, sv, bu, bv,
+                              use_pallas=True, **kw)
+    b = ops.lowrank_conv_nhwc(x_q, u_q, v_q, su, sv, bu, bv,
+                              use_pallas=False, **kw)
+    assert a.dtype == jnp.int8
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def _count_pallas_calls(jaxpr):
+    n = 0
+    for eqn in jaxpr.eqns:
+        if eqn.primitive.name == 'pallas_call':
+            n += 1
+        for v in eqn.params.values():
+            if hasattr(v, 'jaxpr'):
+                n += _count_pallas_calls(v.jaxpr)
+            elif hasattr(v, 'eqns'):
+                n += _count_pallas_calls(v)
+    return n
+
+
+def test_fused_is_one_launch_chained_is_two():
+    """The whole point: a factored conv pair costs ONE pallas_call in the
+    fused lowering and two in the chained lowering."""
+    x_q, u_q, v_q, su, sv, bu, bv, sx = _factored_case(7)
+
+    def fused(xq):
+        return ops.lowrank_conv_nhwc(xq, u_q, v_q, su, sv, bu, bv, sx=sx,
+                                     h_scale=0.05, use_pallas=True)
+
+    def chained(xq):
+        h = ops.quant_conv_static(xq, u_q, su, bu, sx=sx, out_scale=0.05,
+                                  use_pallas=True)
+        return ops.quant_conv_static(h, v_q.reshape(1, 1, 7, 32), sv, bv,
+                                     sx=0.05, use_pallas=True)
+
+    assert _count_pallas_calls(jax.make_jaxpr(fused)(x_q).jaxpr) == 1
+    assert _count_pallas_calls(jax.make_jaxpr(chained)(x_q).jaxpr) == 2
+
+
+def test_fits_fused_envelope():
+    """Fused eligibility: r within one padded 128 lane tile; larger ranks
+    (or absurd widths) chain instead of silently spilling VMEM."""
+    assert fits_fused(1, 64) and fits_fused(7, 512) and fits_fused(128, 512)
+    assert not fits_fused(129, 64)          # rank crosses the 128 lane tile
+    assert not fits_fused(64, 1 << 20)      # output tile cannot fit VMEM
