@@ -68,6 +68,26 @@ def chain_samples(fam, trainer, base, sequence, hps, *, allow_repeats=False):
     return samples, st
 
 
+def median_us(fn, *args, warmup=2, iters=10):
+    """Median wall time of ``fn(*args)`` in microseconds.
+
+    THE benchmark timing convention (BENCH_serving.json / BENCH_load.json
+    must stay comparable): ``warmup`` un-timed runs to absorb jit
+    compilation, then the median — never the mean — over ``iters`` timed
+    runs, each fully materialized via block_until_ready (CI boxes are
+    noisy; medians are the only defensible reduction)."""
+    import statistics
+    import time
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    return statistics.median(ts) * 1e6
+
+
 def save_json(name, obj):
     os.makedirs(OUT_DIR, exist_ok=True)
     with open(os.path.join(OUT_DIR, name), 'w') as f:

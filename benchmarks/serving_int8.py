@@ -36,30 +36,27 @@ from __future__ import annotations
 import argparse
 import json
 import os
-import statistics
-import time
+import sys
 
 import jax
 import jax.numpy as jnp
 
-
-def _time(fn, *args, warmup=2, iters=10):
-    for _ in range(warmup):
-        jax.block_until_ready(fn(*args))
-    ts = []
-    for _ in range(iters):
-        t0 = time.perf_counter()
-        jax.block_until_ready(fn(*args))
-        ts.append(time.perf_counter() - t0)
-    return statistics.median(ts) * 1e6
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+from common import median_us as _time  # noqa: E402  (shared convention)
 
 
-def _early_exit_entry(m, x, iters):
+def _early_exit_entry(m, x, iters, threshold=0.85):
     """Time batched early-exit serving; calibrate the threshold when the
     configured one never fires (ChainState.exit_threshold must actually be
-    exercised at batch serving, not silently bypass every sample)."""
-    from repro.core.export import early_exit_batch
-    threshold = m.exit_threshold
+    exercised at batch serving, not silently bypass every sample).
+
+    The model is NOT mutated: the benchmark threshold is passed into the
+    serving call, and a recalibrated operating point is *returned* in the
+    entry (``exit_threshold_calibrated``).  A caller holding the chain
+    should persist that value to ``ChainState.exit_threshold`` (which
+    ``export_chain`` threads into future exports) — a benchmark has no
+    business rewriting a live ServingModel behind its owner's back."""
+    from repro.core.export import calibrate_exit_threshold, early_exit_batch
 
     def ee(p, x, thr):
         logits, exits = m.fn_exits(p, x)
@@ -75,10 +72,7 @@ def _early_exit_entry(m, x, iters):
     if frac == 0.0:
         # the threshold never fires on this input distribution: recalibrate
         # to the median confidence of the earliest exit head and re-run
-        _, exits = m.fn_exits(m.params, x)
-        first = exits[min(exits)]
-        conf = jax.nn.softmax(first.astype(jnp.float32), -1).max(-1)
-        thr = float(jnp.median(conf)) - 1e-6
+        thr = calibrate_exit_threshold(m, x)
         print(f'  WARNING: no sample exited at threshold {threshold:.2f}; '
               f'recalibrated to batch-median confidence {thr:.3f}')
         us2 = _time(jee, m.params, x, thr, iters=iters)
@@ -135,8 +129,6 @@ def main():
     from repro.core.family import CNNFamily
     from repro.data import SyntheticImages
     from repro.models.cnn import cnn_forward, init_cnn
-    import sys
-    sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
     from roofline import int8_serving_roofline
 
     ap = argparse.ArgumentParser()
@@ -197,8 +189,7 @@ def main():
                  'resident_vs_exported': round(us_int8 / us_res, 3),
                  'plan': m_res.summary()}
         if cfg.exit_stages:
-            m.exit_threshold = 0.85
-            entry.update(_early_exit_entry(m, x, args.iters))
+            entry.update(_early_exit_entry(m, x, args.iters, threshold=0.85))
 
         # the 'fused' variant: the L-pass factored model, one-launch fused
         # kernel vs chained two-launch serving (same plan otherwise)

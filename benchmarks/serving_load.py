@@ -1,0 +1,232 @@
+"""Serving-load benchmark: static batching vs early-exit slot compaction.
+
+Drives the request-level serving runtime (repro/serving/) with a Poisson
+arrival trace against an int8-resident exported CNN and A/Bs the two
+schedulers on the SAME trace:
+
+* ``static``     — full batches through the monolithic ``fn_exits``; the
+  early-exit rule picks which head answers but every slot pays full depth.
+* ``compacting`` — the stage-split plan: exited samples complete after
+  their segment, survivors are compacted, freed slots backfill from the
+  queue (ContinuousBatchScheduler).
+
+Methodology on a noisy CI box: per-stage batch costs and the monolithic
+batch cost are measured as **medians over --iters runs** at the fixed slot
+geometry, then a simulated single-executor clock replays the trace on
+those medians — the A/B cannot be corrupted by a concurrent load spike,
+and the numbers are reproducible.  The data path is still executed for
+real: every request's answer is checked bit-exact against the monolithic
+model serving that request alone at the same slot geometry (the resident
+export's bit-exactness contract; --oracle-all checks every request,
+otherwise a sample).
+
+Results go to BENCH_load.json (backend, batch geometry, median timings,
+per-scheduler latency/throughput/occupancy).  ``--smoke`` is the CI
+wiring: a tiny trace, asserts the scheduler drains the queue and answers
+match the oracle, writes nothing unless --out is given.
+
+    PYTHONPATH=src python benchmarks/serving_load.py [--slots 32] [--requests 512]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+from common import median_us as _median_us  # noqa: E402  (shared convention)
+
+
+def measure_stage_costs(model, x, iters=10):
+    """Median per-segment batch cost (us) at the batch geometry of ``x``,
+    feeding each segment the real carry of the previous one, plus the
+    monolithic ``fn_exits`` cost on the same batch."""
+    costs, carry = [], x
+    for k in range(model.n_stages):
+        costs.append(_median_us(model.stage_fns[k], model.params, carry,
+                                iters=iters))
+        if k < model.n_stages - 1:
+            _, carry = model.run_stage(k, carry)
+    mono = _median_us(model.fn_exits, model.params, x, iters=iters)
+    return costs, mono
+
+
+def poisson_trace(xs, rate, seed=0):
+    """Requests over ``xs`` with exponential inter-arrival times (rate/s)."""
+    from repro.serving import Request
+    rng = np.random.default_rng(seed)
+    t = np.cumsum(rng.exponential(1.0 / rate, size=xs.shape[0]))
+    return [Request(i, xs[i], float(t[i])) for i in range(xs.shape[0])]
+
+
+def check_oracle(model, completions, reqs, threshold, slots):
+    """Every sampled request's answer must be bit-exact vs the monolithic
+    model serving that request ALONE, padded to the same slot geometry."""
+    from repro.serving import exit_decisions
+    bad = []
+    for r in reqs:
+        xb = jnp.concatenate([r.x[None],
+                              jnp.zeros((slots - 1,) + r.x.shape,
+                                        r.x.dtype)])
+        logits, exits = model.fn_exits(model.params, xb)
+        stage, ans = exit_decisions(logits, exits, threshold)
+        c = completions[r.rid]
+        if c.exit_stage != int(stage[0]) or not np.array_equal(
+                c.logits, ans[0]):
+            bad.append(r.rid)
+    return bad
+
+
+def main():
+    from repro.configs.cnn import CNN_REGISTRY
+    from repro.core.export import calibrate_exit_threshold, export_cnn
+    from repro.core.family import CNNFamily
+    from repro.data import SyntheticImages
+    from repro.kernels.tiling import batch_slots
+    from repro.serving import ContinuousBatchScheduler, StaticBatchScheduler
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument('--config', default='resnet8-cifar',
+                    choices=sorted(CNN_REGISTRY))
+    ap.add_argument('--slots', type=int, default=32)
+    ap.add_argument('--requests', type=int, default=512)
+    ap.add_argument('--iters', type=int, default=10)
+    ap.add_argument('--rate', type=float, default=None,
+                    help='arrival rate (req/s); default 2x the static '
+                         'service capacity — heavy traffic, so each '
+                         'scheduler completes at its own capacity and the '
+                         'A/B measures service rate, not arrival rate')
+    ap.add_argument('--threshold', type=float, default=None,
+                    help='exit threshold; default calibrates to the batch-'
+                         'median first-head confidence')
+    ap.add_argument('--quantile', type=float, default=0.5,
+                    help='calibration target: fraction exiting at head 1')
+    ap.add_argument('--pallas', action='store_true',
+                    help='force Pallas kernels (interpret mode on CPU)')
+    ap.add_argument('--oracle-all', action='store_true',
+                    help='oracle-check every request (default: 16 sampled)')
+    ap.add_argument('--smoke', action='store_true',
+                    help='tiny CI run: 24 requests, 8 slots, 2 iters, '
+                         'asserts drain + bit-exact answers, no file '
+                         'output unless --out is given')
+    ap.add_argument('--out', default=None)
+    args = ap.parse_args()
+    if args.smoke:
+        args.slots, args.requests, args.iters = 8, 24, 2
+    out = args.out
+    if out is None and not args.smoke:
+        out = os.path.join(os.path.dirname(os.path.dirname(
+            os.path.abspath(__file__))), 'BENCH_load.json')
+
+    use_pallas = args.pallas or jax.default_backend() == 'tpu'
+    slots = batch_slots(args.slots)
+    fam = CNNFamily(SyntheticImages())
+    cfg = CNN_REGISTRY[args.config].replace(w_bits=8, a_bits=8)
+    params = fam.init(jax.random.key(0), cfg)
+    params, cfg = fam.add_exits(jax.random.key(1), params,
+                                cfg.replace(exit_stages=()),
+                                fam.default_exit_points(cfg))
+    cfg = cfg.replace(w_bits=8, a_bits=8)
+
+    key = jax.random.key(7)
+    xs = jax.random.normal(key, (args.requests, 32, 32, 3))
+    calib = jax.random.normal(jax.random.fold_in(key, 1),
+                              (slots, 32, 32, 3))
+    model = export_cnn(params, cfg, use_pallas=use_pallas, calibrate=calib)
+    threshold = args.threshold
+    if threshold is None:
+        threshold = calibrate_exit_threshold(model, calib,
+                                             quantile=args.quantile)
+        print(f'calibrated exit threshold: {threshold:.4f} '
+              f'(target exit quantile {args.quantile})')
+
+    stage_costs_us, mono_us = measure_stage_costs(
+        model, calib, iters=args.iters)
+
+    # service capacities (req/s) from the median costs and the calibration
+    # batch's exit mix: static pays the monolithic cost for every slot;
+    # compacting pays segment k only for the fraction still alive there.
+    from repro.serving import exit_decisions
+    logits_c, exits_c = model.fn_exits(model.params, calib)
+    stage_c, _ = exit_decisions(logits_c, exits_c, threshold)
+    alive, cost_per_batch = 1.0, 0.0
+    for k in range(model.n_stages):
+        cost_per_batch += alive * stage_costs_us[k]
+        if k < model.n_stages - 1:
+            s = model.stage_exits[k]
+            alive *= 1.0 - float(np.mean(stage_c == s))
+    cap_static = slots / (mono_us * 1e-6)
+    cap_compact = slots / (cost_per_batch * 1e-6)
+    rate = args.rate or 2.0 * cap_static
+    trace = poisson_trace(xs, rate, seed=0)
+
+    static = StaticBatchScheduler(model, slots=slots, threshold=threshold,
+                                  batch_cost=mono_us * 1e-6)
+    s_comp, s_met = static.run_trace(trace)
+    compacting = ContinuousBatchScheduler(
+        model, slots=slots, threshold=threshold,
+        stage_costs=[c * 1e-6 for c in stage_costs_us])
+    c_comp, c_met = compacting.run_trace(trace)
+
+    assert len(s_comp) == len(c_comp) == args.requests, \
+        'scheduler failed to drain the queue'
+    oracle_reqs = (trace if (args.smoke or args.oracle_all)
+                   else trace[:: max(1, len(trace) // 16)])
+    for name, comp in (('static', s_comp), ('compacting', c_comp)):
+        bad = check_oracle(model, comp, oracle_reqs, threshold, slots)
+        assert not bad, f'{name}: requests {bad[:8]} diverge from oracle'
+    agree = all(s_comp[r.rid].exit_stage == c_comp[r.rid].exit_stage
+                and np.array_equal(s_comp[r.rid].logits,
+                                   c_comp[r.rid].logits) for r in trace)
+    assert agree, 'static and compacting schedulers disagree on answers'
+
+    s_sum, c_sum = s_met.summary(), c_met.summary()
+    results = {
+        'backend': jax.default_backend(),
+        'int8_path': 'pallas' if use_pallas else 'jnp-ref',
+        'config': cfg.name,
+        'batch_geometry': {'slots_requested': args.slots,
+                           'slots_padded': slots,
+                           'image': [32, 32, 3]},
+        'n_requests': args.requests,
+        'arrival_rate_rps': round(rate, 3),
+        'exit_threshold': round(threshold, 6),
+        'timing': {'iters': args.iters, 'reduction': 'median',
+                   'stage_costs_us': [round(c, 1) for c in stage_costs_us],
+                   'monolithic_us': round(mono_us, 1)},
+        'capacity_static_rps': round(cap_static, 3),
+        'capacity_compacting_rps': round(cap_compact, 3),
+        'static': s_sum,
+        'compacting': c_sum,
+        'compaction_throughput_x': round(
+            c_sum['throughput_rps'] / max(s_sum['throughput_rps'], 1e-9), 3),
+        'compaction_p99_x': round(
+            s_sum['p99_latency_s'] / max(c_sum['p99_latency_s'], 1e-9), 3),
+    }
+    print(f"{cfg.name} slots={slots} rate={rate:.0f}/s "
+          f"exit_fraction={c_sum['exit_fraction']:.2f}")
+    print(f"  static:     {s_sum['throughput_rps']:.0f} req/s  "
+          f"p50={s_sum['p50_latency_s'] * 1e3:.2f}ms "
+          f"p99={s_sum['p99_latency_s'] * 1e3:.2f}ms")
+    print(f"  compacting: {c_sum['throughput_rps']:.0f} req/s  "
+          f"p50={c_sum['p50_latency_s'] * 1e3:.2f}ms "
+          f"p99={c_sum['p99_latency_s'] * 1e3:.2f}ms "
+          f"occupancy={c_sum['batch_occupancy']}")
+    print(f"  compaction: {results['compaction_throughput_x']:.2f}x "
+          f"throughput, {results['compaction_p99_x']:.2f}x p99")
+    if args.smoke:
+        print('smoke OK: queue drained, answers bit-exact vs oracle')
+
+    if out:
+        with open(out, 'w') as f:
+            json.dump(results, f, indent=1)
+        print(f'wrote {out}')
+
+
+if __name__ == '__main__':
+    main()

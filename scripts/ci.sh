@@ -29,4 +29,10 @@ python examples/quickstart.py --smoke
 # BENCH file (the committed BENCH_serving.json comes from a full run).
 python benchmarks/serving_int8.py --smoke
 
+# serving-runtime smoke: a tiny Poisson trace through the continuous-
+# batching scheduler — asserts the queue drains and every request's answer
+# is bit-exact vs the monolithic model serving it alone at the same slot
+# geometry (the early-exit compaction contract).  Writes no BENCH file.
+python benchmarks/serving_load.py --smoke
+
 exec python -m pytest -x -q "$@"

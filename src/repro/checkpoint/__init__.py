@@ -1,2 +1,4 @@
+from repro.checkpoint.chain_io import (load_chain_state,
+                                       save_chain_state)  # noqa: F401
 from repro.checkpoint.manager import (CheckpointManager, latest_step,
                                       load_checkpoint, save_checkpoint)  # noqa: F401

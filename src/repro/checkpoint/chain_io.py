@@ -1,0 +1,125 @@
+"""ChainState persistence: the compression chain survives preemption, and
+the serving model registry loads finished chains from disk.
+
+Built on :mod:`repro.checkpoint.manager` (sharded atomic npz steps): the
+params pytree — including low-rank ``{'u','v'}`` factored weights and
+pruned shapes — goes through ``save_checkpoint``; everything the arrays
+cannot carry rides in a JSON sidecar per step:
+
+* the cfg dataclass (class path + fields, tuples restored on load),
+* the chain scalars (``exit_threshold``, ``prune_scale``,
+  ``lowrank_scale``, ``base_bitops``, ``base_bits``, ``dyn_accuracy``),
+* ``exit_probs`` and the per-pass ``history``,
+* the pytree *structure* of params (so load needs no tree_like from the
+  caller — pruned/factored trees have data-dependent shapes the caller
+  cannot reconstruct),
+* the PRNG key data.
+
+``step`` is the number of passes applied (0 = trained baseline), which is
+what lets ``Pipeline.run(checkpoint_dir=...)`` resume mid-chain.  The
+family adapter is NOT serialized — it holds the data source; the caller
+passes it to :func:`load_chain_state`.
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+import json
+import os
+
+import jax
+import numpy as np
+
+from repro.checkpoint.manager import (latest_step, load_checkpoint,
+                                      save_checkpoint)
+
+
+def _spec(tree):
+    """JSON-able structure descriptor of a pytree of dict/list/tuple."""
+    if isinstance(tree, dict):
+        return {'kind': 'dict', 'items': {k: _spec(v) for k, v in
+                                          tree.items()}}
+    if isinstance(tree, (list, tuple)):
+        return {'kind': type(tree).__name__,
+                'items': [_spec(v) for v in tree]}
+    return None                                   # leaf
+
+
+def _skeleton(spec):
+    """Rebuild a same-structure tree with placeholder leaves (the
+    ``tree_like`` that manager.load_checkpoint keys its arrays by)."""
+    if spec is None:
+        return np.zeros((), np.float32)
+    if spec['kind'] == 'dict':
+        return {k: _skeleton(v) for k, v in spec['items'].items()}
+    seq = [_skeleton(v) for v in spec['items']]
+    return tuple(seq) if spec['kind'] == 'tuple' else seq
+
+
+def _tuplify(v):
+    return tuple(_tuplify(x) for x in v) if isinstance(v, list) else v
+
+
+def _meta_path(ckpt_dir: str, step: int) -> str:
+    return os.path.join(ckpt_dir, f'chain_{step:08d}.json')
+
+
+def save_chain_state(ckpt_dir: str, state, step: int = 0) -> str:
+    """Persist a ChainState as checkpoint ``step`` (atomic; see manager).
+
+    The JSON sidecar is committed BEFORE the npz step dir: ``latest_step``
+    only sees committed step dirs, so a crash between the two leaves the
+    previous step fully loadable (an orphaned sidecar is harmless and gets
+    overwritten by the next save of that step)."""
+    tree = {'params': state.params,
+            'key': np.asarray(jax.random.key_data(state.key))}
+    os.makedirs(ckpt_dir, exist_ok=True)
+    cfg = state.cfg
+    meta = {
+        'step': step,
+        'cfg_class': f'{type(cfg).__module__}:{type(cfg).__qualname__}',
+        'cfg': dataclasses.asdict(cfg),
+        'spec': _spec(tree),
+        'scalars': {k: getattr(state, k) for k in
+                    ('base_bitops', 'base_bits', 'prune_scale',
+                     'lowrank_scale', 'exit_threshold', 'dyn_accuracy')},
+        'exit_probs': (None if state.exit_probs is None
+                       else {str(k): v for k, v in state.exit_probs.items()}),
+        'history': state.history,
+    }
+    tmp = _meta_path(ckpt_dir, step) + '.tmp'
+    with open(tmp, 'w') as f:
+        json.dump(meta, f)
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(tmp, _meta_path(ckpt_dir, step))
+    return save_checkpoint(ckpt_dir, step, tree)
+
+
+def load_chain_state(ckpt_dir: str, family, step: int | None = None):
+    """Restore ``(ChainState, step)`` saved by :func:`save_chain_state`.
+
+    ``step=None`` loads the newest committed step.  ``family`` is the live
+    family adapter (data source + hooks) the state should run on.
+    """
+    from repro.core.passes import ChainState
+    if step is None:
+        step = latest_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f'no chain checkpoints under {ckpt_dir}')
+    with open(_meta_path(ckpt_dir, step)) as f:
+        meta = json.load(f)
+    mod, _, qual = meta['cfg_class'].partition(':')
+    cfg_cls = importlib.import_module(mod)
+    for part in qual.split('.'):
+        cfg_cls = getattr(cfg_cls, part)
+    cfg = cfg_cls(**{k: _tuplify(v) for k, v in meta['cfg'].items()})
+    tree, _ = load_checkpoint(ckpt_dir, step, _skeleton(meta['spec']))
+    exit_probs = meta['exit_probs']
+    if exit_probs is not None:
+        exit_probs = {int(k): v for k, v in exit_probs.items()}
+    state = ChainState(family=family, cfg=cfg, params=tree['params'],
+                       key=jax.random.wrap_key_data(tree['key']),
+                       exit_probs=exit_probs, history=meta['history'],
+                       **meta['scalars'])
+    return state, step

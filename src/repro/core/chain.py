@@ -81,21 +81,64 @@ class Pipeline:
 
     def run(self, family, cfg, trainer: Trainer, *, key=None,
             state: ChainState | None = None,
-            pretrain_steps=None) -> ChainState:
+            pretrain_steps=None, checkpoint_dir=None) -> ChainState:
         """Apply the passes in order, fine-tuning and recording metrics.
 
         Returns the final ChainState; ``state.history`` holds per-stage
         metrics.  Pass an existing baseline ``state`` to reuse one trained
         original model across different sequences (how the paper compares
         orders fairly).
+
+        ``checkpoint_dir`` persists the ChainState after the baseline and
+        after every pass (checkpoint/chain_io.py: atomic step dirs, step =
+        passes applied) and RESUMES from the newest committed step on the
+        next call — a preempted long chain re-runs only the pass it died
+        in, and the serving model registry (repro/serving/registry.py)
+        loads the same artifacts.  A passed-in ``state`` takes precedence
+        over any checkpoint on disk.
         """
+        start = 0
+        if state is None and checkpoint_dir is not None:
+            from repro.checkpoint.chain_io import load_chain_state
+            from repro.checkpoint.manager import latest_step
+            if latest_step(checkpoint_dir) is not None:
+                state, start = load_chain_state(checkpoint_dir, family)
+                if start > len(self.steps):
+                    raise ValueError(
+                        f'checkpoint at {checkpoint_dir} has {start} passes '
+                        f'applied but this pipeline only runs '
+                        f'{len(self.steps)} ({self.sequence!r})')
+                # the on-disk chain must be a prefix of THIS pipeline: the
+                # history records one entry per applied pass, so the last
+                # `start` labels must equal this sequence's first keys —
+                # resuming a 'PQ' checkpoint under a 'DP' pipeline is an
+                # error, not a silent skip of different passes
+                applied = [h.get('pass')
+                           for h in state.history][-start:] if start else []
+                want = [p.key for p, _ in self.steps[:start]]
+                if applied != want:
+                    raise ValueError(
+                        f'checkpoint at {checkpoint_dir} was produced by '
+                        f'passes {applied} but this pipeline starts with '
+                        f'{want} ({self.sequence!r}); use a fresh '
+                        f'checkpoint_dir')
         if state is None:
             state = init_chain_state(family, cfg, key or jax.random.key(0),
                                      trainer, pretrain_steps=pretrain_steps)
-        for p, hp in self.steps:
+            self._save(checkpoint_dir, state, 0)
+        for i, (p, hp) in enumerate(self.steps):
+            if i < start:
+                continue                         # already applied on disk
             state = p.fn(state, hp, trainer)     # hp already resolved
             state.metrics(trainer, p.key)
+            self._save(checkpoint_dir, state, i + 1)
         return state
+
+    @staticmethod
+    def _save(checkpoint_dir, state, step):
+        if checkpoint_dir is not None:
+            from repro.checkpoint.chain_io import save_chain_state
+            save_chain_state(checkpoint_dir, state, step=step)
 
     def export(self, state: ChainState, *, use_pallas=None) -> Any:
         """Compile the finished chain for serving (core/export.py backend

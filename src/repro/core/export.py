@@ -110,8 +110,11 @@ class QAct:
     """An int8 activation travelling between layers with its static scale.
 
     ``scale`` is a Python float captured at export calibration — a jaxpr
-    constant, never recomputed at serve time.  The struct only exists
-    inside the traced serving function; HBM sees the int8 ``q`` alone.
+    constant, never recomputed at serve time.  HBM sees the int8 ``q``
+    alone.  Registered as a pytree (``q`` the leaf, ``scale`` static aux
+    data) so a stage-resumable serving segment can return its int8 carry
+    across the jit boundary and the next segment can consume it — the
+    scheduler moves int8 bytes between stages, never fp32.
     """
     q: Any
     scale: float
@@ -119,6 +122,10 @@ class QAct:
     @property
     def shape(self):
         return self.q.shape
+
+
+jax.tree_util.register_pytree_node(
+    QAct, lambda a: ((a.q,), a.scale), lambda s, c: QAct(c[0], s))
 
 
 def _deq(x):
@@ -429,20 +436,63 @@ def _resident_layers(plan: LayerPlan, use_pallas: bool, qparams=None):
     return conv_fn, fc_fn, glue_fn, pool_fn
 
 
+def _make_stage_fns(cfg, kw):
+    """Split the compiled layer plan at the early-exit boundaries.
+
+    Returns ``(stage_fns, stage_exits)``: one jit'd segment per exit
+    boundary plus a final segment.  Segment ``i < last`` maps
+    ``(params, carry) -> (exits, carry)`` where ``exits`` holds exactly the
+    boundary head's logits and ``carry`` is whatever the injected glue
+    produces at that stage boundary — an int8 :class:`QAct` on the
+    int8-resident plan, fp32 on the dynamic path.  The final segment maps
+    ``(params, carry) -> logits``.  ``stage_exits[i]`` names the exit
+    stage segment ``i`` ends at (``None`` for the final segment).
+
+    Chaining every segment is value-identical to the monolithic
+    ``fn_exits`` — same layer names, same plan entries, same kernels — and
+    bit-exact at fixed batch geometry; the request scheduler
+    (repro/serving/) exploits the split to return exited samples after
+    segment ``i`` and backfill their slots before paying for segment
+    ``i + 1``.
+    """
+    bounds = tuple(sorted(cfg.exit_stages))
+    fns, lo = [], 0
+    for s in bounds:
+        def seg(p, h, *, _lo=lo, _hi=s):
+            return cnn_lib.cnn_forward(p, cfg, h, collect_exits=True,
+                                       start_stage=_lo, stop_stage=_hi, **kw)
+        fns.append(jax.jit(seg))
+        lo = s + 1
+
+    def final(p, h, *, _lo=lo):
+        return cnn_lib.cnn_forward(p, cfg, h, start_stage=_lo, **kw)
+    fns.append(jax.jit(final))
+    return tuple(fns), bounds + (None,)
+
+
+def exit_confidence(head_logits):
+    """THE early-exit decision quantity: fp32 softmax max-confidence per
+    sample.  Single definition shared by :func:`early_exit_batch`, the
+    request scheduler (repro/serving/scheduler.py), and
+    :func:`calibrate_exit_threshold` — a sample exits iff
+    ``exit_confidence(head) > threshold``, strictly, everywhere."""
+    return jax.nn.softmax(head_logits.astype(jnp.float32), axis=-1).max(-1)
+
+
 def early_exit_batch(logits, exits, threshold):
     """Batched early-exit selection: (pred (B,), stage (B,) int32).
 
-    Each sample takes the earliest exit whose softmax confidence clears
-    ``threshold``; stage is -1 for samples that ran to the final head.
-    Pure jnp (no per-sample control flow) so it jits into the serving fn.
+    Each sample takes the earliest exit whose :func:`exit_confidence`
+    clears ``threshold``; stage is -1 for samples that ran to the final
+    head.  Pure jnp (no per-sample control flow) so it jits into the
+    serving fn.
     """
     pred = jnp.argmax(logits, -1)
     stage = jnp.full(pred.shape, -1, jnp.int32)
     taken = jnp.zeros(pred.shape, bool)
     for s in sorted(exits):
-        p = jax.nn.softmax(exits[s].astype(jnp.float32), axis=-1)
-        take = (p.max(-1) > threshold) & ~taken
-        pred = jnp.where(take, jnp.argmax(p, -1), pred)
+        take = (exit_confidence(exits[s]) > threshold) & ~taken
+        pred = jnp.where(take, jnp.argmax(exits[s], -1), pred)
         stage = jnp.where(take, jnp.int32(s), stage)
         taken |= take
     return pred, stage
@@ -457,6 +507,8 @@ class ServingModel:
     fn_exits: Callable | None = None   # jit'd (params, x) -> (logits, exits)
     plan: LayerPlan | None = None      # int8-resident exports only
     exit_threshold: float = 0.9        # E's operating point (export_chain)
+    stage_fns: tuple | None = None     # layer plan split at exit boundaries
+    stage_exits: tuple = ()            # exit stage each segment ends at
 
     def serve(self, x):
         return self.fn(self.params, x)
@@ -466,14 +518,57 @@ class ServingModel:
         ``threshold=None`` uses the chain's calibrated operating point."""
         if self.fn_exits is None:
             raise ValueError('model was exported without exit heads')
+        if x.shape[0] == 0:            # empty batch: nothing to run
+            return (jnp.zeros((0,), jnp.int32), jnp.zeros((0,), jnp.int32))
         if threshold is None:
             threshold = self.exit_threshold
         logits, exits = self.fn_exits(self.params, x)
         return early_exit_batch(logits, exits, threshold)
 
+    @property
+    def n_stages(self) -> int:
+        """Number of stage-resumable segments (0 = no exit heads)."""
+        return len(self.stage_fns) if self.stage_fns else 0
+
+    def run_stage(self, i: int, carry):
+        """Run segment ``i`` of the stage-split plan.  ``carry`` is the
+        input batch for ``i == 0``, else the carry segment ``i - 1``
+        returned (int8 ``QAct`` on the resident plan).  Intermediate
+        segments return ``(exits, carry)``; the last returns logits."""
+        if not self.stage_fns:
+            raise ValueError('model was exported without exit heads '
+                             '(no stage boundaries to resume at)')
+        return self.stage_fns[i](self.params, carry)
+
+    def serve_stages(self, x):
+        """Chain every stage segment: ``(logits, exits)``, value-identical
+        to ``fn_exits(params, x)`` (the stage-split vs monolithic oracle)."""
+        exits, h = {}, x
+        for i in range(self.n_stages - 1):
+            seg_exits, h = self.run_stage(i, h)
+            exits.update(seg_exits)
+        return self.run_stage(self.n_stages - 1, h), exits
+
     def summary(self) -> dict | None:
         """The layer plan's deployed-cost summary (int8-resident exports)."""
         return self.plan.summary() if self.plan is not None else None
+
+
+def calibrate_exit_threshold(model: ServingModel, x, quantile=0.5):
+    """Calibrate an early-exit operating point on a sample batch.
+
+    Returns the confidence threshold at which a ``quantile`` fraction of
+    the batch exits at its earliest head (0.5 -> the batch-median
+    confidence).  Pure function: the caller decides where the value lives
+    (``ChainState.exit_threshold`` via its setter, a benchmark record, a
+    scheduler argument) — it must NOT be written into a live model behind
+    the caller's back.
+    """
+    if model.fn_exits is None:
+        raise ValueError('model was exported without exit heads')
+    _, exits = model.fn_exits(model.params, x)
+    conf = exit_confidence(exits[min(exits)])
+    return float(jnp.quantile(conf, 1.0 - quantile)) - 1e-6
 
 
 def export_cnn(params, cfg, *, use_pallas=None, calibrate=None,
@@ -511,9 +606,13 @@ def export_cnn(params, cfg, *, use_pallas=None, calibrate=None,
     def fn_exits(p, x):
         return cnn_lib.cnn_forward(p, cfg, x, collect_exits=True, **kw)
 
+    stage_fns, stage_exits = (None, ())
+    if cfg.exit_stages:
+        stage_fns, stage_exits = _make_stage_fns(cfg, kw)
     return ServingModel(cfg=cfg, params=qparams, fn=fn,
                         fn_exits=fn_exits if cfg.exit_stages else None,
-                        plan=plan)
+                        plan=plan, stage_fns=stage_fns,
+                        stage_exits=stage_exits)
 
 
 def export_lm(params, cfg) -> ServingModel:

@@ -15,11 +15,26 @@ TPU is catastrophic (1-wide MXU/VPU tiles).  The shared policy:
 from __future__ import annotations
 
 LANE = 128          # TPU lane width: last-dim tiles are always 128 wide
+SUBLANE = 8         # TPU sublane width: second-minor tiles pack 8 rows
 
 
 def pad_to(dim: int, mult: int = LANE) -> int:
     """Next multiple of ``mult`` >= dim (dim itself when it already is)."""
     return -(-dim // mult) * mult
+
+
+def batch_slots(n: int, mult: int = SUBLANE) -> int:
+    """Serving batch geometry: the slot count for ``n`` concurrent requests.
+
+    The im2col int8 matmuls tile M = B*OH*OW, so the batch dim lands on the
+    sublane axis — a batch that is a multiple of 8 keeps every M tile
+    rectangular.  The request batcher (repro/serving/) pads its slot count
+    up to this and keeps it FIXED across rounds: one compiled program per
+    stage (no per-occupancy retraces), and per-slot results independent of
+    how the other slots are filled (the scheduler's bit-exactness
+    contract).
+    """
+    return pad_to(max(int(n), 1), mult)
 
 
 def fit_block(block: int, dim: int, *, floor: int = 8) -> int:

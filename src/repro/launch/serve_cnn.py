@@ -8,6 +8,16 @@ paper's D→P→Q→E chain.
 
     PYTHONPATH=src python -m repro.launch.serve_cnn --config resnet8-cifar \
         --batches 8 --batch 64 --threshold 0.85
+
+``--server`` switches from caller-assembled static batches to the request
+runtime (repro/serving/): requests arrive on a Poisson trace, the
+continuous-batching scheduler forms tile-padded batches, returns
+early-exited samples after their stage segment, compacts the survivors,
+and backfills freed slots from the queue; the run reports p50/p99 latency,
+throughput, exit mix, and batch occupancy.
+
+    PYTHONPATH=src python -m repro.launch.serve_cnn --server \
+        --requests 256 --rate 800 --slots 32
 """
 from __future__ import annotations
 
@@ -17,6 +27,49 @@ import time
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+
+def _serve_trace(model, fam, cfg, args):
+    """--server mode: drive the request scheduler over a Poisson trace on
+    the wall clock (cf. benchmarks/serving_load.py for the median-cost
+    simulated A/B against static batching)."""
+    from repro.core.export import calibrate_exit_threshold
+    from repro.serving import ContinuousBatchScheduler, Request
+
+    rng = np.random.default_rng(0)
+    stream = fam.eval_batches(-(-args.requests // args.batch), args.batch)
+    xs = jnp.concatenate([x for x, _ in stream])[:args.requests]
+    ys = jnp.concatenate([y for x, y in stream])[:args.requests]
+    threshold = args.threshold
+    if threshold is None:
+        threshold = calibrate_exit_threshold(model, xs[:args.slots])
+        print(f'calibrated exit threshold: {threshold:.4f}')
+    t = np.cumsum(rng.exponential(1.0 / args.rate, size=args.requests))
+    reqs = [Request(i, xs[i], float(t[i])) for i in range(args.requests)]
+    sched = ContinuousBatchScheduler(
+        model, slots=args.slots, threshold=threshold,
+        max_wait=args.max_wait)
+    # warm EVERY stage program off the clock: threshold 2.0 means nothing
+    # exits, so the warm batch traverses all segments (a real-threshold
+    # warm-up could exit at head 1 and leave deeper segments uncompiled,
+    # charging their jit to the first unlucky real batch's latency)
+    ContinuousBatchScheduler(
+        model, slots=args.slots, threshold=2.0).run_trace(
+            [Request(-1 - i, xs[i], 0.0)
+             for i in range(min(4, args.requests))])
+    completions, metrics = sched.run_trace(reqs)
+    s = metrics.summary()
+    hit = sum(1 for i in range(args.requests)
+              if completions[i].pred == int(ys[i]))
+    print(f'config={cfg.name} backend={jax.default_backend()} '
+          f'slots={sched.slots} threshold={threshold:.3f}')
+    print(f"served {s['n_requests']} requests at rate={args.rate:.0f}/s: "
+          f"throughput={s['throughput_rps']:.0f} req/s "
+          f"p50={s['p50_latency_s'] * 1e3:.2f}ms "
+          f"p99={s['p99_latency_s'] * 1e3:.2f}ms "
+          f"acc={hit / max(args.requests, 1):.3f}")
+    print(f"  exit mix: {s['exit_mix']}  "
+          f"occupancy: {s['batch_occupancy']}")
 
 
 def main():
@@ -31,7 +84,9 @@ def main():
                     choices=sorted(CNN_REGISTRY))
     ap.add_argument('--batch', type=int, default=64)
     ap.add_argument('--batches', type=int, default=8)
-    ap.add_argument('--threshold', type=float, default=0.85)
+    ap.add_argument('--threshold', type=float, default=None,
+                    help='exit threshold (default 0.85; --server default '
+                         'calibrates on the stream)')
     ap.add_argument('--steps', type=int, default=60,
                     help='QAT fine-tune steps before export (0 = raw init)')
     ap.add_argument('--pallas', action='store_true',
@@ -39,7 +94,23 @@ def main():
     ap.add_argument('--resident', action='store_true',
                     help='int8-resident plan: calibrate static activation '
                          'scales on the first eval batch (core/export.py)')
+    ap.add_argument('--server', action='store_true',
+                    help='request-level serving: Poisson arrivals through '
+                         'the continuous-batching scheduler '
+                         '(repro/serving/); implies --resident, and '
+                         '--threshold none recalibrates on the stream')
+    ap.add_argument('--requests', type=int, default=256,
+                    help='--server: trace length')
+    ap.add_argument('--rate', type=float, default=500.0,
+                    help='--server: Poisson arrival rate (req/s)')
+    ap.add_argument('--slots', type=int, default=32,
+                    help='--server: scheduler batch slots (tile-padded)')
+    ap.add_argument('--max-wait', type=float, default=0.05,
+                    help='--server: run a partial batch once its oldest '
+                         'request has waited this long (seconds)')
     args = ap.parse_args()
+    if args.server:
+        args.resident = True
 
     fam = CNNFamily(SyntheticImages())
     cfg = CNN_REGISTRY[args.config]
@@ -59,14 +130,17 @@ def main():
         print(f'layer plan: {s["kernel_launches"]} kernel launches, '
               f'{s["n_fused_lowrank"]} fused low-rank, '
               f'fallback MACs {s["fallback_mac_fraction"]:.1%}')
+    if args.server:
+        return _serve_trace(model, fam, cfg, args)
+    threshold = 0.85 if args.threshold is None else args.threshold
     # warm the jit caches off the clock
-    model.serve_early_exit(stream[0][0], threshold=args.threshold)
+    model.serve_early_exit(stream[0][0], threshold=threshold)
 
     stages = {s: 0 for s in cfg.exit_stages}
     hit = tot = 0
     t0 = time.perf_counter()
     for x, y in stream:
-        pred, stage = model.serve_early_exit(x, threshold=args.threshold)
+        pred, stage = model.serve_early_exit(x, threshold=threshold)
         jax.block_until_ready(pred)
         hit += int(jnp.sum(pred == y))
         tot += int(y.size)

@@ -203,7 +203,8 @@ def _block_forward(blk, x, kind, stride, quant, conv_fn, glue_fn,
 
 
 def cnn_forward(params, cfg, x, *, collect_exits=False, conv_fn=None,
-                fc_fn=None, glue_fn=None, pool_fn=None):
+                fc_fn=None, glue_fn=None, pool_fn=None, start_stage=0,
+                stop_stage=None):
     """x: (B, H, W, C) -> logits (B, classes); optionally exit logits dict.
 
     ``conv_fn``/``fc_fn``/``glue_fn``/``pool_fn`` inject the layer
@@ -213,17 +214,39 @@ def cnn_forward(params, cfg, x, *, collect_exits=False, conv_fn=None,
     training and serving cannot drift structurally.  Each call site carries
     a stable ``name`` (``s{stage}b{block}.conv1`` etc.) so the export
     layer-plan compiler can attach per-layer static activation scales.
+
+    ``start_stage``/``stop_stage`` make the forward *stage-resumable* (the
+    serving scheduler's continuous-batching split, core/export.py
+    ``_make_stage_fns``):
+
+    * ``start_stage=0`` runs the stem; ``start_stage=s > 0`` treats ``x``
+      as the carry activation that left stage ``s - 1`` (whatever type the
+      injected glue produced there — fp32 in QAT, an int8 ``QAct`` on the
+      int8-resident plan) and skips the stem and earlier stages.
+    * ``stop_stage=s`` stops after stage ``s`` and returns ``(exits, h)``
+      — the exit logits collected in range plus the carry — WITHOUT running
+      the final head.  ``stop_stage=None`` runs to the head as before.
+
+    Layer names are position-stable, so a resumed segment reads the same
+    export-plan entries the monolithic forward calibrated.
     """
     conv_fn = conv_fn or conv
     fc_fn = fc_fn or fc
     glue_fn = glue_fn or norm_act
     pool_fn = pool_fn or global_pool
     quant = (cfg.w_bits, cfg.a_bits)
-    h = glue_fn(params['stem_norm'],
-                conv_fn(params['stem'], x, quant=quant, name='stem'),
-                act='relu', name='stem.norm')
+    if start_stage == 0:
+        h = glue_fn(params['stem_norm'],
+                    conv_fn(params['stem'], x, quant=quant, name='stem'),
+                    act='relu', name='stem.norm')
+    else:
+        h = x                                     # carry from stage s-1
     exits = {}
     for s, blocks in enumerate(params['stages']):
+        if s < start_stage:
+            continue
+        if stop_stage is not None and s > stop_stage:
+            break
         for b, blk in enumerate(blocks):
             stride = 2 if (b == 0 and s > 0) else 1
             h = _block_forward(blk, h, cfg.kind, stride, quant, conv_fn,
@@ -232,6 +255,8 @@ def cnn_forward(params, cfg, x, *, collect_exits=False, conv_fn=None,
             feat = pool_fn(h)
             exits[s] = fc_fn(params['exits'][str(s)], feat, quant=quant,
                              name=f'exit{s}')
+    if stop_stage is not None:
+        return exits, h                           # mid-network segment
     feat = pool_fn(h)
     logits = fc_fn(params['head'], feat, quant=quant, name='head')
     if collect_exits:

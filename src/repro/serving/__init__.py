@@ -1,0 +1,17 @@
+"""Request-level serving runtime over exported ServingModels.
+
+Where the compression chain's output meets traffic: a time-gated request
+queue (``request.py``), a continuous-batching scheduler that compacts
+early-exited slots and backfills from the queue (``scheduler.py``), a
+checkpoint-backed model registry (``registry.py``), and the latency/
+throughput/occupancy metrics layer (``metrics.py``).  Driven by
+``launch/serve_cnn.py --server`` and benchmarked (static batching vs
+early-exit compaction under a Poisson trace) by
+``benchmarks/serving_load.py``.
+"""
+from repro.serving.metrics import ServingMetrics, percentile  # noqa: F401
+from repro.serving.registry import ModelRegistry  # noqa: F401
+from repro.serving.request import (Completion, Request,  # noqa: F401
+                                   RequestQueue)
+from repro.serving.scheduler import (ContinuousBatchScheduler,  # noqa: F401
+                                     StaticBatchScheduler, exit_decisions)

@@ -1,0 +1,72 @@
+"""Serving metrics: latency percentiles, throughput, exit mix, occupancy.
+
+One :class:`ServingMetrics` instance rides along with a scheduler run.  The
+scheduler reports every completion and every executed batch (stage index +
+live-slot count); ``summary()`` folds them into the numbers the benchmark
+records — p50/p99 latency, throughput over the makespan, the per-stage
+exit distribution, and batch occupancy (the fraction of slots doing useful
+work, the quantity early-exit compaction exists to raise).
+
+Percentiles interpolate between order statistics (numpy's 'linear'
+definition) so small smoke traces still give stable numbers.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+
+def percentile(values, q: float) -> float:
+    """Linear-interpolated percentile of ``values`` (q in [0, 100])."""
+    xs = sorted(float(v) for v in values)
+    if not xs:
+        return 0.0
+    if len(xs) == 1:
+        return xs[0]
+    pos = (len(xs) - 1) * q / 100.0
+    lo = int(pos)
+    hi = min(lo + 1, len(xs) - 1)
+    return xs[lo] + (xs[hi] - xs[lo]) * (pos - lo)
+
+
+@dataclass
+class ServingMetrics:
+    """Accumulates per-completion and per-batch records for one run."""
+    latencies: list = field(default_factory=list)
+    exit_stages: list = field(default_factory=list)
+    batches: list = field(default_factory=list)   # (stage_idx, live, slots)
+    t_first_arrival: float | None = None
+    t_last_done: float = 0.0
+
+    def record_completion(self, c) -> None:
+        self.latencies.append(c.latency)
+        self.exit_stages.append(c.exit_stage)
+        if self.t_first_arrival is None or c.t_arrival < self.t_first_arrival:
+            self.t_first_arrival = c.t_arrival
+        self.t_last_done = max(self.t_last_done, c.t_done)
+
+    def record_batch(self, stage_idx: int, live: int, slots: int) -> None:
+        self.batches.append((stage_idx, live, slots))
+
+    def summary(self) -> dict:
+        n = len(self.latencies)
+        makespan = (self.t_last_done - (self.t_first_arrival or 0.0)
+                    if n else 0.0)
+        exited = sum(1 for s in self.exit_stages if s >= 0)
+        stages = sorted({s for s, _, _ in self.batches})
+        occ = {s: [l for st, l, _ in self.batches if st == s]
+               for s in stages}
+        slots = {s: next(sl for st, _, sl in self.batches if st == s)
+                 for s in stages}
+        return {
+            'n_requests': n,
+            'p50_latency_s': round(percentile(self.latencies, 50), 6),
+            'p99_latency_s': round(percentile(self.latencies, 99), 6),
+            'throughput_rps': round(n / makespan, 3) if makespan > 0 else 0.0,
+            'exit_fraction': round(exited / n, 4) if n else 0.0,
+            'exit_mix': {str(s): self.exit_stages.count(s)
+                         for s in sorted(set(self.exit_stages))},
+            'n_batches': {str(s): len(occ[s]) for s in stages},
+            'batch_occupancy': {
+                str(s): round(sum(occ[s]) / (len(occ[s]) * slots[s]), 4)
+                for s in stages if occ[s]},
+        }

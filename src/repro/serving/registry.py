@@ -1,0 +1,59 @@
+"""Serving model registry: named endpoints over exported artifacts.
+
+The runtime's front door: a finished chain is persisted with
+``checkpoint.save_chain_state`` (what ``Pipeline.run(checkpoint_dir=...)``
+writes after every pass), and the registry turns such an artifact back
+into a live :class:`~repro.core.export.ServingModel` — loading the
+ChainState, exporting through the family's registered serving backend
+(``calibrate`` selects the int8-resident plan the scheduler's
+bit-exactness contract wants), and keeping it addressable by name so the
+launcher/scheduler can route requests.  Multi-model placement across
+devices is the scaling PR this scaffolding exists for.
+"""
+from __future__ import annotations
+
+from repro.checkpoint.chain_io import load_chain_state
+from repro.core.export import export_chain
+
+
+class ModelRegistry:
+    """Name -> ServingModel map with checkpoint-backed loading."""
+
+    def __init__(self):
+        self._models = {}
+
+    def register(self, name: str, model) -> None:
+        """Register an already-exported ServingModel under ``name``."""
+        if name in self._models:
+            raise ValueError(f'model {name!r} already registered')
+        self._models[name] = model
+
+    def load(self, name: str, ckpt_dir: str, family, *, step=None,
+             use_pallas=None, calibrate=None):
+        """Load a persisted ChainState and export it for serving.
+
+        ``calibrate`` (a sample batch) compiles the int8-resident layer
+        plan — required for the scheduler's bit-exact compaction; the
+        chain's stored ``exit_threshold`` rides along via export_chain.
+        Returns the registered ServingModel.
+        """
+        state, _ = load_chain_state(ckpt_dir, family, step=step)
+        model = export_chain(state, use_pallas=use_pallas,
+                             calibrate=calibrate)
+        self.register(name, model)
+        return model
+
+    def get(self, name: str):
+        if name not in self._models:
+            raise KeyError(f'no serving model {name!r} '
+                           f'(registered: {sorted(self._models)})')
+        return self._models[name]
+
+    def names(self) -> list:
+        return sorted(self._models)
+
+    def __contains__(self, name: str) -> bool:
+        return name in self._models
+
+    def __len__(self) -> int:
+        return len(self._models)

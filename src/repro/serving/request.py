@@ -1,0 +1,72 @@
+"""Requests, completions, and the arrival queue for the serving runtime.
+
+A :class:`Request` is one sample (one image) with an arrival timestamp; a
+:class:`Completion` is the scheduler's answer — the request's logits (the
+exit head's when it exited early, the final head's otherwise), the argmax
+prediction, which stage it exited at, and the latency split.  Timestamps
+are plain float seconds on whatever clock drives the scheduler (wall clock
+or the benchmark's simulated cost-model clock).
+
+:class:`RequestQueue` is the arrival buffer: FIFO, time-aware — the
+scheduler only admits requests whose arrival time has passed on its clock,
+so a recorded Poisson trace replays faithfully.
+"""
+from __future__ import annotations
+
+from collections import deque
+from dataclasses import dataclass
+from typing import Any
+
+
+@dataclass
+class Request:
+    """One inference request: ``x`` is a single unbatched sample (H, W, C)."""
+    rid: int
+    x: Any
+    t_arrival: float = 0.0
+
+
+@dataclass
+class Completion:
+    """The served answer for one request."""
+    rid: int
+    logits: Any                # the head that answered (exit or final), fp32
+    pred: int
+    exit_stage: int            # stage index of the exit taken; -1 = final head
+    t_arrival: float
+    t_done: float
+
+    @property
+    def latency(self) -> float:
+        return self.t_done - self.t_arrival
+
+
+class RequestQueue:
+    """FIFO arrival queue with time-gated admission."""
+
+    def __init__(self, requests=()):
+        self._q = deque(sorted(requests, key=lambda r: r.t_arrival))
+
+    def push(self, req: Request) -> None:
+        if self._q and req.t_arrival < self._q[-1].t_arrival:
+            raise ValueError(
+                f'request {req.rid} arrives at {req.t_arrival} before the '
+                f'queue tail ({self._q[-1].t_arrival}); push in arrival order')
+        self._q.append(req)
+
+    def pop_ready(self, now: float, limit: int) -> list:
+        """Up to ``limit`` requests that have arrived by ``now``, FIFO."""
+        out = []
+        while self._q and len(out) < limit and self._q[0].t_arrival <= now:
+            out.append(self._q.popleft())
+        return out
+
+    def next_arrival(self) -> float | None:
+        """Arrival time of the head request (None when empty)."""
+        return self._q[0].t_arrival if self._q else None
+
+    def __len__(self) -> int:
+        return len(self._q)
+
+    def __bool__(self) -> bool:
+        return bool(self._q)

@@ -1,0 +1,271 @@
+"""Request-level schedulers: continuous batching with early-exit compaction.
+
+Two schedulers share one contract (``run_trace(requests) -> (completions,
+metrics)``) so the load benchmark can A/B them on the same arrival trace:
+
+* :class:`StaticBatchScheduler` — the pre-PR-4 deployment: fill a batch
+  from the queue, run the monolithic ``fn_exits`` to FULL depth, apply the
+  early-exit rule afterwards.  Exits change which head answers but save no
+  compute: one hard sample holds every exited slot hostage to full depth.
+
+* :class:`ContinuousBatchScheduler` — the tentpole: the model's layer plan
+  is split at the exit boundaries (``ServingModel.stage_fns``).  Each
+  round runs ONE segment on a batch padded to the tile geometry
+  (``kernels/tiling.batch_slots``); samples whose exit confidence clears
+  the threshold complete immediately, surviving slots are *compacted*
+  (gathered dense) into the next segment's pending buffer, and the freed
+  slots are backfilled from the queue before the next stage-1 round.  On
+  the int8-resident export the carry between segments is an int8
+  :class:`~repro.core.export.QAct` — the inter-stage traffic the E pass
+  actually leaves alive.
+
+Bit-exactness contract: slots are independent at fixed batch geometry
+(convs, matmuls, GroupNorm, softmax are all per-sample at fixed B), so on
+a *resident* export every request's answer is bit-exact vs the monolithic
+``fn_exits`` on that request alone at the same slot geometry — regardless
+of which requests shared its batches.  The dynamic-scale export computes
+per-batch activation abs-max scales, so its answers depend on slot
+composition; the scheduler still runs it, but the bit-exactness guarantee
+(and the CI smoke assertion) applies to resident exports.
+
+Time: the scheduler advances a single-executor clock.  ``stage_costs``
+injects measured per-segment batch costs (the benchmark's simulated clock
+— medians, so a noisy box cannot corrupt the A/B); ``stage_costs=None``
+uses real wall time per executed batch.  Arrival timestamps gate
+admission either way, so a Poisson trace replays faithfully.
+"""
+from __future__ import annotations
+
+import time
+from collections import deque
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.export import exit_confidence
+from repro.kernels.tiling import batch_slots
+from repro.serving.metrics import ServingMetrics
+from repro.serving.request import Completion, RequestQueue
+
+
+def exit_decisions(logits, exits, threshold):
+    """Per-sample ``(exit_stage, answer_logits)`` arrays — the scheduler-side
+    mirror of :func:`repro.core.export.early_exit_batch` (earliest exit
+    whose :func:`~repro.core.export.exit_confidence` strictly clears
+    ``threshold`` wins; -1 means the final head answers).  The decision
+    rule is the shared ``exit_confidence`` — no second copy to drift."""
+    stage = np.full(logits.shape[0], -1, np.int64)
+    ans = np.array(logits, np.float32, copy=True)
+    taken = np.zeros(logits.shape[0], bool)
+    for s in sorted(exits):
+        take = (np.asarray(exit_confidence(exits[s])) > threshold) & ~taken
+        ans[take] = np.asarray(exits[s], np.float32)[take]
+        stage[take] = s
+        taken |= take
+    return stage, ans
+
+
+def _gather_rows(sources, slots):
+    """Assemble a batch padded to exactly ``slots`` from per-sample
+    ``(src, idx)`` references — ``idx=None`` means ``src`` IS the sample
+    (a fresh request's x), otherwise ``src`` is a batch pytree (array or
+    QAct) and ``idx`` a row in it.  Consecutive rows of the same source
+    batch (one round's compacted survivors) gather with ONE indexed take
+    per pytree leaf instead of O(slots) per-row slices.  The fixed
+    geometry keeps one compiled program per stage and slot results
+    independent of occupancy."""
+    groups = []                          # (src, [idx...]) runs, or (row,)
+    for src, idx in sources:
+        if idx is None:
+            groups.append((src, None))
+        elif groups and groups[-1][1] is not None \
+                and groups[-1][0] is src:
+            groups[-1][1].append(idx)
+        else:
+            groups.append((src, [idx]))
+    parts = []
+    for src, idxs in groups:
+        if idxs is None:
+            parts.append(jax.tree.map(lambda a: a[None], src))
+        else:
+            arr = jnp.asarray(idxs)
+            parts.append(jax.tree.map(lambda a: a[arr], src))
+    batch = (parts[0] if len(parts) == 1
+             else jax.tree.map(lambda *ps: jnp.concatenate(ps), *parts))
+    return jax.tree.map(
+        lambda a: jnp.concatenate(
+            [a, jnp.zeros((slots - a.shape[0],) + a.shape[1:], a.dtype)])
+        if a.shape[0] < slots else a,
+        batch)
+
+
+class _Clock:
+    """Single-executor clock: simulated per-stage costs, or wall time."""
+
+    def __init__(self, stage_costs=None):
+        self.costs = stage_costs
+
+    def charge(self, stage_idx, fn):
+        """Run ``fn`` (returns materialized outputs), return its cost."""
+        if self.costs is not None:
+            fn()
+            return float(self.costs[stage_idx])
+        t0 = time.perf_counter()
+        fn()
+        return time.perf_counter() - t0
+
+
+class ContinuousBatchScheduler:
+    """Continuous-batching scheduler with early-exit slot compaction.
+
+    ``model`` must be exported with exit heads (``stage_fns`` present);
+    see the module docstring for the resident-export bit-exactness
+    contract.  ``slots`` is padded up to the tile geometry and stays fixed
+    for the scheduler's lifetime.  ``threshold=None`` uses the chain's
+    calibrated operating point (``model.exit_threshold``).
+    """
+
+    def __init__(self, model, *, slots=32, threshold=None, stage_costs=None,
+                 max_wait=None):
+        if not model.stage_fns:
+            raise ValueError(
+                'model has no stage-split plan (exported without exit '
+                'heads); the continuous scheduler needs exit boundaries '
+                'to compact at')
+        self.model = model
+        self.slots = batch_slots(slots)
+        self.threshold = (model.exit_threshold if threshold is None
+                          else threshold)
+        self.max_wait = max_wait
+        self.n_segs = model.n_stages
+        if stage_costs is not None and len(stage_costs) != self.n_segs:
+            raise ValueError(f'stage_costs must have {self.n_segs} entries')
+        self._clock = _Clock(stage_costs)
+
+    # ---- scheduling policy: deepest full batch first, wait to fill when
+    # arrivals are still coming, drain partial batches once they are not.
+    # ``max_wait`` bounds request aging under light load: a partial batch
+    # runs once its oldest request has waited that long.
+    def _pick(self, pend, more_arrivals, now):
+        for k in reversed(range(self.n_segs)):
+            if len(pend[k]) >= self.slots:
+                return k
+        if more_arrivals:
+            if self.max_wait is not None:
+                for k in reversed(range(self.n_segs)):
+                    if pend[k] and now - pend[k][0][0].t_arrival \
+                            >= self.max_wait:
+                        return k              # aged out: run partial
+            return None                       # wait for the queue to fill
+        for k in reversed(range(self.n_segs)):
+            if pend[k]:
+                return k                      # drain
+        return None
+
+    def _run_segment(self, k, pend, completions, metrics, now):
+        items = [pend[k].popleft()
+                 for _ in range(min(len(pend[k]), self.slots))]
+        batch = _gather_rows([(src, idx) for _, src, idx in items],
+                             self.slots)
+        out = []
+
+        def execute():
+            out.append(jax.block_until_ready(
+                self.model.run_stage(k, batch)))
+        now += self._clock.charge(k, execute)
+        metrics.record_batch(k, len(items), self.slots)
+
+        if k < self.n_segs - 1:
+            exits, carry = out[0]
+            s = self.model.stage_exits[k]
+            conf = np.asarray(exit_confidence(exits[s]))
+            head = np.asarray(exits[s], np.float32)
+            for i, (req, _, _) in enumerate(items):
+                if conf[i] > self.threshold:
+                    c = Completion(rid=req.rid, logits=head[i],
+                                   pred=int(head[i].argmax()), exit_stage=s,
+                                   t_arrival=req.t_arrival, t_done=now)
+                    completions[req.rid] = c
+                    metrics.record_completion(c)
+                else:                         # compact: reference the row
+                    pend[k + 1].append((req, carry, i))
+        else:
+            logits = np.asarray(out[0], np.float32)
+            for i, (req, _, _) in enumerate(items):
+                c = Completion(rid=req.rid, logits=logits[i],
+                               pred=int(logits[i].argmax()), exit_stage=-1,
+                               t_arrival=req.t_arrival, t_done=now)
+                completions[req.rid] = c
+                metrics.record_completion(c)
+        return now
+
+    def run_trace(self, requests):
+        """Serve a whole arrival trace; returns ``({rid: Completion},
+        ServingMetrics)``.  Terminates exactly when every request has
+        completed (the queue and every stage buffer drained)."""
+        queue = RequestQueue(requests)
+        pend = [deque() for _ in range(self.n_segs)]
+        completions, metrics = {}, ServingMetrics()
+        now = queue.next_arrival() or 0.0
+        while queue or any(pend):
+            for r in queue.pop_ready(now, self.slots - len(pend[0])):
+                pend[0].append((r, r.x, None))
+            k = self._pick(pend, more_arrivals=bool(queue), now=now)
+            if k is None:
+                nxt = queue.next_arrival()
+                if self.max_wait is not None and any(pend):
+                    oldest = min(p[0][0].t_arrival for p in pend if p)
+                    nxt = min(nxt, oldest + self.max_wait)
+                now = max(now, nxt)
+                continue
+            now = self._run_segment(k, pend, completions, metrics, now)
+        return completions, metrics
+
+
+class StaticBatchScheduler:
+    """The baseline: full batches through the monolithic ``fn_exits``.
+
+    Early exits are applied to the *results* (same decision rule as the
+    compacting scheduler, so answers agree bit-exactly on a resident
+    export) but every slot pays full depth — the compute the E pass saved
+    is given back at serve time.  ``batch_cost`` injects the measured
+    monolithic batch cost for the simulated clock (None = wall time).
+    """
+
+    def __init__(self, model, *, slots=32, threshold=None, batch_cost=None):
+        if model.fn_exits is None:
+            raise ValueError('model was exported without exit heads')
+        self.model = model
+        self.slots = batch_slots(slots)
+        self.threshold = (model.exit_threshold if threshold is None
+                          else threshold)
+        self._clock = _Clock(None if batch_cost is None else [batch_cost])
+
+    def run_trace(self, requests):
+        queue = RequestQueue(requests)
+        completions, metrics = {}, ServingMetrics()
+        now = queue.next_arrival() or 0.0
+        while queue:
+            ready = queue.pop_ready(now, self.slots)
+            while len(ready) < self.slots and queue:   # wait to fill
+                now = max(now, queue.next_arrival())
+                ready += queue.pop_ready(now, self.slots - len(ready))
+            batch = _gather_rows([(r.x, None) for r in ready], self.slots)
+            out = []
+
+            def execute():
+                out.append(jax.block_until_ready(
+                    self.model.fn_exits(self.model.params, batch)))
+            now += self._clock.charge(0, execute)
+            metrics.record_batch(0, len(ready), self.slots)
+            logits, exits = out[0]
+            stage, ans = exit_decisions(logits, exits, self.threshold)
+            for i, req in enumerate(ready):
+                c = Completion(rid=req.rid, logits=ans[i],
+                               pred=int(ans[i].argmax()),
+                               exit_stage=int(stage[i]),
+                               t_arrival=req.t_arrival, t_done=now)
+                completions[req.rid] = c
+                metrics.record_completion(c)
+        return completions, metrics
