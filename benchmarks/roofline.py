@@ -37,6 +37,14 @@ def int8_serving_roofline(plan_layers: dict) -> dict:
     requantize-epilogue work actually moves: the compute term is identical,
     the activation-traffic term shrinks ~4x — the fp32 HBM floor that
     bounded every previous speedup.
+
+    The int8-resident term is dtype-accurate per layer: only the declared
+    fp32 fallback layers (per-group depth > 1 grouped convs, none in this
+    repo's families) pay 4 bytes/element on their outputs — depthwise
+    layers run the int8 kernel (kernels/depthwise_conv.py) and move int8
+    like everything else, with their share reported separately
+    (``depthwise_bytes`` / ``depthwise_traffic_fraction``) instead of
+    hiding in a fallback bucket.
     """
     macs = sum(e['macs'] for e in plan_layers.values())
     elems_in = sum(_prod(e['in_shape']) for e in plan_layers.values())
@@ -47,11 +55,20 @@ def int8_serving_roofline(plan_layers: dict) -> dict:
     # fp32 path: read + write each layer boundary in fp32, plus the
     # dynamic abs-max pass re-reading every layer input
     t_m_fp32 = (4.0 * elems_in + 4.0 * elems_out + 4.0 * elems_in) / HBM_BW
-    t_m_int8 = (1.0 * elems_in + 1.0 * elems_out) / HBM_BW
+    int8_bytes = dw_bytes = 0.0
+    for e in plan_layers.values():
+        out_b = 4.0 if e.get('fallback') else 1.0   # fallback emits fp32
+        layer = _prod(e['in_shape']) + out_b * _prod(e['out_shape'])
+        int8_bytes += layer
+        if e.get('depthwise'):
+            dw_bytes += layer
+    t_m_int8 = int8_bytes / HBM_BW
     return {
         'compute_s': t_c,
         'memory_s_fp32_roundtrip': t_m_fp32,
         'memory_s_int8_resident': t_m_int8,
+        'depthwise_bytes': dw_bytes,    # per step; shapes include the batch
+        'depthwise_traffic_fraction': dw_bytes / max(int8_bytes, 1e-30),
         'bound_fp32': 'memory' if t_m_fp32 > t_c else 'compute',
         'bound_int8': 'memory' if t_m_int8 > t_c else 'compute',
         'traffic_reduction': t_m_fp32 / max(t_m_int8, 1e-30),

@@ -15,9 +15,18 @@ every call.  This benchmark times, per CNN config:
   recalibrates the threshold to the batch's median exit confidence so the
   E pass is actually exercised
 * ``lowrank_fused`` / ``lowrank_two_launch`` — the factored ('L' pass)
-  model served with the one-launch fused kernel vs the chained pair (the
-  two lowerings are identical on the CPU jnp backend — the A/B becomes
-  real on TPU, where the launch counts differ; tests pin them)
+  model served with the one-launch fused kernel (forced via
+  ``select_kernels='fused'``) vs the chained pair (``fuse_lowrank=False``);
+  the measured ``winner`` and the per-layer choice the default cost model
+  would make (``model_selection``) are both recorded, so the A/B shows
+  whether export-time selection ships the faster lowering.  The two
+  lowerings are identical on the CPU jnp backend — the A/B becomes real
+  on TPU, where the launch counts differ; tests pin them.
+
+``--smoke`` additionally asserts the zero-fp32 contract: mobilenet's plan
+must report ``fallback_mac_fraction == 0`` (depthwise serves on the int8
+kernel), and a ``select_kernels='measure'`` export must never record a
+choice that its own measurements say is slower (selection consistency).
 
 ``--breakdown`` adds a per-layer table (im2col/patch-materialization cost
 vs kernel cost — the resnet8 int8 regression of PR 1 lived there) and the
@@ -99,9 +108,19 @@ def _breakdown(m, x, iters, use_pallas):
         x_q = jnp.zeros(e['in_shape'], jnp.int8)
         if e['fallback']:
             # fallback layers never materialize im2col patches (they serve
-            # via lax.conv / shifted FMAs directly on NHWC) — no costs to
-            # attribute beyond the declared fp32 conv itself
+            # via lax.conv directly on NHWC) — no costs to attribute
+            # beyond the declared fp32 conv itself
             us_i = us_k = None
+        elif e.get('depthwise'):
+            # depthwise is the direct (non-im2col) int8 kernel: no patch
+            # cost at all, just the per-channel VPU kernel
+            sw = jnp.ones((cout,), jnp.float32)
+            us_i = 0.0
+            conv = jax.jit(lambda v, s=e['stride'], sx=e['sx'], sw=sw:
+                           ops.depthwise_conv_static(
+                               v, jnp.zeros((kh, kw, 1, cout), jnp.int8),
+                               sw, sx=sx, stride=s, use_pallas=use_pallas))
+            us_k = round(_time(conv, x_q, iters=iters), 1)
         else:
             w_q = jnp.zeros((kh, kw, cin, cout), jnp.int8)
             sw = jnp.ones((cout,), jnp.float32)
@@ -114,11 +133,13 @@ def _breakdown(m, x, iters, use_pallas):
             us_k = round(_time(conv, x_q, iters=iters), 1)
         rows.append({'layer': name, 'in_shape': list(e['in_shape']),
                      'macs': e['macs'], 'im2col_us': us_i,
-                     'kernel_us': us_k, 'fallback': e['fallback']})
+                     'kernel_us': us_k, 'fallback': e['fallback'],
+                     'depthwise': bool(e.get('depthwise'))})
         print(f"  {name:14s} in={str(e['in_shape']):>18s} "
               f"macs={e['macs']:>10d} "
               + ('fallback (no im2col)' if e['fallback'] else
-                 f'im2col={us_i:8.1f}us kernel={us_k:8.1f}us'))
+                 f'im2col={us_i:8.1f}us kernel={us_k:8.1f}us'
+                 + (' [depthwise]' if e.get('depthwise') else '')))
     return rows
 
 
@@ -192,14 +213,20 @@ def main():
             entry.update(_early_exit_entry(m, x, args.iters, threshold=0.85))
 
         # the 'fused' variant: the L-pass factored model, one-launch fused
-        # kernel vs chained two-launch serving (same plan otherwise)
+        # kernel (forced) vs chained two-launch serving (same plan
+        # otherwise), plus what the default cost model would actually ship
         fparams, _, mac_scale = fam.factorize(params, cfg, energy=0.6,
                                               min_rank=2)
         m_fused = export_cnn(fparams, cfg, use_pallas=use_pallas,
-                             calibrate=x)
+                             calibrate=x, select_kernels='fused')
         m_2l = export_cnn(fparams, cfg, use_pallas=use_pallas, calibrate=x,
                           fuse_lowrank=False)
         if m_fused.summary()['n_fused_lowrank'] > 0:
+            m_sel = export_cnn(fparams, cfg, use_pallas=use_pallas,
+                               calibrate=x)      # select_kernels='model'
+            us_f = round(_time(m_fused.fn, m_fused.params, x,
+                               iters=args.iters), 1)
+            us_2 = round(_time(m_2l.fn, m_2l.params, x, iters=args.iters), 1)
             entry['fused'] = {
                 'lowrank_mac_scale': round(mac_scale, 4),
                 'n_fused_lowrank': m_fused.summary()['n_fused_lowrank'],
@@ -207,12 +234,36 @@ def main():
                     m_fused.summary()['kernel_launches'],
                 'kernel_launches_two_launch':
                     m_2l.summary()['kernel_launches'],
-                'lowrank_fused_us': round(
-                    _time(m_fused.fn, m_fused.params, x,
-                          iters=args.iters), 1),
-                'lowrank_two_launch_us': round(
-                    _time(m_2l.fn, m_2l.params, x, iters=args.iters), 1),
+                'lowrank_fused_us': us_f,
+                'lowrank_two_launch_us': us_2,
+                'winner': 'fused' if us_f <= us_2 else 'chained',
+                'model_selection': {
+                    n: s['choice'] for n, s in
+                    m_sel.summary()['lowrank_selection'].items()},
             }
+            if args.smoke:
+                # selection consistency: a measure-mode export must never
+                # record a choice its own timings say is slower
+                m_meas = export_cnn(fparams, cfg, use_pallas=use_pallas,
+                                    calibrate=x, select_kernels='measure')
+                for n, s in m_meas.summary()['lowrank_selection'].items():
+                    if 'fused_us' not in s:
+                        continue
+                    want = ('fused' if s['fused_us'] <= s['chained_us']
+                            else 'chained')
+                    assert s['choice'] == want, (n, s)
+                entry['fused']['selection_consistent'] = True
+                print(f'  smoke: measured selection consistent over '
+                      f"{len(m_meas.summary()['lowrank_selection'])} layers")
+
+        if args.smoke and 'mobilenet' in cfg.name:
+            # the zero-fp32-MACs contract: depthwise serves on the int8
+            # kernel, nothing falls back
+            s = entry['plan']
+            assert s['fallback_mac_fraction'] == 0.0, s
+            assert s['n_fallback'] == 0 and s['n_depthwise'] > 0, s
+            print(f"  smoke: mobilenet fallback_mac_fraction == 0 "
+                  f"({s['n_depthwise']} depthwise layers on the int8 kernel)")
 
         if args.breakdown:
             print(f'{cfg.name} per-layer breakdown:')

@@ -25,8 +25,12 @@ python examples/quickstart.py --smoke
 
 # serving-benchmark smoke: times the fake-quant / dynamic-int8 /
 # int8-resident paths (incl. the fused low-rank variant) on a tiny batch —
-# catches export-plan regressions that only bite at serve time.  Writes no
-# BENCH file (the committed BENCH_serving.json comes from a full run).
+# catches export-plan regressions that only bite at serve time.  Also
+# asserts the zero-fp32 contract (mobilenet's plan must report
+# fallback_mac_fraction == 0 — depthwise serves on the int8 kernel) and
+# kernel-selection consistency (a measure-mode export never records a
+# fused/chained choice its own timings say is slower).  Writes no BENCH
+# file (the committed BENCH_serving.json comes from a full run).
 python benchmarks/serving_int8.py --smoke
 
 # serving-runtime smoke: a tiny Poisson trace through the continuous-

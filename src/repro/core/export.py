@@ -21,12 +21,21 @@ call.  This module realizes the Q pass at inference in two tiers:
 
    * the **fused low-rank kernel** (kernels/lowrank_conv.py) — a factored
      (u, v) conv pair in ONE Pallas launch, rank intermediate in VMEM —
-     whenever the lane-padded rank fits a single 128 tile;
-   * the **chained** int8 kernels (u then v, both int8-resident) otherwise;
+     when the lane-padded rank fits a single 128 tile AND **cost-based
+     kernel selection** picks it: the plan prices fused vs chained per
+     layer (``select_kernels='model'`` via the analytic
+     ``lowering_costs`` block-geometry model, ``'measure'`` by timing
+     both lowerings at export) and records the winner + why in the plan,
+     so a known-slower kernel never ships;
+   * the **chained** int8 kernels (u then v, both int8-resident) when the
+     rank exceeds the envelope or selection prefers two launches;
    * the plain int8 conv/matmul kernels with the **requantize epilogue**
      (kernels/quant_matmul.py ``out_scale``) for unfactored layers;
-   * the declared **fp32 fallback** (dequantized ``lax.conv``) for grouped
-     /depthwise convs, whose MAC fraction the plan summary reports.
+   * the **depthwise kernel** (kernels/depthwise_conv.py) for grouped
+     convs with per-group depth 1 — direct per-channel int8 MACs,
+     int8-in/int8-out, so MobileNet's ``fallback_mac_fraction`` is 0.
+     Only per-group depth > 1 (absent from this repo's families) keeps
+     the declared fp32 ``lax.conv`` fallback the summary reports.
 
    Activation scales are static Python floats baked into the jaxpr; no
    abs-max pass ever reads an activation tensor at serve time.  Between
@@ -58,7 +67,8 @@ import jax.numpy as jnp
 
 from repro.core.quantization import quantize_params_for_serving
 from repro.kernels import ops, ref
-from repro.kernels.lowrank_conv import fits_fused
+from repro.kernels.depthwise_conv import fits_depthwise
+from repro.kernels.lowrank_conv import fits_fused, lowering_costs
 from repro.models import cnn as cnn_lib
 
 
@@ -146,10 +156,12 @@ class LayerPlan:
     a_qmax: float
 
     def summary(self) -> dict:
-        """Deployed-cost summary: MACs by kernel class, launch counts, and
-        the MAC fraction still served by the dequantized fp32 fallback
-        (depthwise/grouped convs) — the mobilenet configs' residual fp32
-        cost, reported so it cannot hide.
+        """Deployed-cost summary: MACs by kernel class, launch counts, the
+        MAC fraction still served by the dequantized fp32 fallback (only
+        per-group-depth>1 grouped convs — depthwise layers run the int8
+        kernel, so mobilenet reports 0.0 here), and the per-layer fused-vs-
+        chained low-rank selection with its reason, so a shipped kernel
+        choice is always explicable.
 
         Counts cover the plain serving path (``ServingModel.fn``); the
         early-exit heads — calibrated too, but only executed by
@@ -168,31 +180,46 @@ class LayerPlan:
             'n_chained_lowrank': sum(1 for e in main.values()
                                      if e.get('factored')
                                      and not e.get('fused')),
+            'n_depthwise': sum(1 for e in main.values()
+                               if e.get('depthwise')),
             'n_fallback': sum(1 for e in main.values() if e['fallback']),
             'kernel_launches': sum(e['launches'] for e in main.values()),
             'n_exit_heads': len(exits),
             'exit_head_launches': sum(e['launches'] for e in exits.values()),
             'total_macs': total,
             'fallback_mac_fraction': fallback / max(total, 1),
+            'lowrank_selection': {n: e['selection'] for n, e in main.items()
+                                  if e.get('selection')},
         }
 
 
-def _compile_layer_plan(params, cfg, x, a_qmax,
-                        fuse_lowrank=True) -> LayerPlan:
+def _compile_layer_plan(params, cfg, x, a_qmax, fuse_lowrank=True,
+                        select_kernels='model') -> LayerPlan:
     """One eager calibration forward (the QAT fake-quant math) that records
     a static activation scale at every layer boundary and picks the serving
-    kernel per layer (fused low-rank / chained / plain / fallback).
-    ``fuse_lowrank=False`` forces factored pairs onto the chained
-    two-launch lowering (the benchmark A/B)."""
+    kernel per layer (fused low-rank / chained / plain / depthwise /
+    fallback).
+
+    Factored pairs inside the fused envelope are priced fused-vs-chained:
+    ``select_kernels='model'`` (default) uses the analytic
+    ``lowering_costs`` block-geometry model at the calibration batch
+    geometry; ``'fused'`` forces the one-launch lowering; ``'measure'`` is
+    resolved afterwards by :func:`_measure_lowrank_selection` (wall-clock
+    on the export backend).  ``fuse_lowrank=False`` forces the chained
+    two-launch lowering regardless (the benchmark A/B).  The decision and
+    its reason land in ``e['selection']`` and the plan summary."""
     layers, glues = {}, {}
 
     def amax(v) -> float:
         return max(float(jnp.max(jnp.abs(v))), 1e-8)
 
     def conv_fn(p, cx, *, stride=1, quant=(0, 0), groups=1, name=None):
-        e = {'sx': amax(cx) / a_qmax, 'kind': 'conv', 'fallback': groups > 1,
-             'factored': 'u' in p, 'fused': False, 'stride': stride,
-             'in_shape': tuple(cx.shape)}
+        depthwise = groups > 1 and 'u' not in p and fits_depthwise(
+            p['w'].shape)
+        e = {'sx': amax(cx) / a_qmax, 'kind': 'conv',
+             'fallback': groups > 1 and not depthwise,
+             'depthwise': depthwise, 'factored': 'u' in p, 'fused': False,
+             'stride': stride, 'in_shape': tuple(cx.shape)}
         if 'u' in p:
             mid = cnn_lib.conv(p['u'], cx, stride=stride, quant=quant,
                                groups=groups)
@@ -202,7 +229,27 @@ def _compile_layer_plan(params, cfg, x, a_qmax,
             cout = p['v']['w'].shape[-1]
             oh, ow = y.shape[1], y.shape[2]
             e['macs'] = oh * ow * r * (kh * kw * cin + cout)
-            e['fused'] = fuse_lowrank and fits_fused(r, cout)
+            if not fits_fused(r, cout):
+                sel = {'choice': 'chained',
+                       'why': f'rank {r} exceeds the fused envelope'}
+            elif not fuse_lowrank:
+                sel = {'choice': 'chained',
+                       'why': 'fuse_lowrank=False (forced two-launch A/B)'}
+            elif select_kernels == 'fused':
+                sel = {'choice': 'fused',
+                       'why': 'select_kernels=fused (forced)'}
+            else:   # 'model' now; 'measure' re-decides from wall-clock after
+                c = lowering_costs(y.shape[0] * oh * ow, kh * kw * cin, r,
+                                   cout)
+                ch = 'fused' if c['fused_us'] <= c['chained_us'] else \
+                    'chained'
+                sel = {'choice': ch,
+                       'why': (f"modeled fused {c['fused_us']:.1f}us vs "
+                               f"chained {c['chained_us']:.1f}us"),
+                       'fused_us': c['fused_us'],
+                       'chained_us': c['chained_us']}
+            e['selection'] = sel
+            e['fused'] = sel['choice'] == 'fused'
             e['launches'] = 1 if e['fused'] else 2
             e['rank'] = r
             e['kernel'] = (kh, kw)
@@ -326,6 +373,64 @@ def _resolve_layer_params(params, name: str):
     return params['stages'][int(s)][int(b)][name.split('.')[1]]
 
 
+def _measure_lowrank_selection(plan: LayerPlan, qparams, use_pallas: bool,
+                               *, reps: int = 3) -> None:
+    """Resolve ``select_kernels='measure'``: wall-clock fused vs chained.
+
+    For every factored conv inside the fused envelope, times both lowerings
+    on the export backend (zero int8 input at the calibration geometry —
+    timing is data-independent, best of ``reps`` after a compile warmup)
+    and rewrites ``e['selection']`` / ``e['fused']`` with the measured
+    winner, so the plan cannot ship a variant the machine just proved
+    slower.  Mutates the plan in place."""
+    import time
+    qmax = plan.a_qmax
+    for name, e in plan.layers.items():
+        if e['kind'] != 'conv' or not e['factored']:
+            continue
+        if e['selection']['choice'] == 'chained' and 'envelope' in \
+                e['selection']['why']:
+            continue                     # rank-ineligible: nothing to race
+        p = _resolve_layer_params(qparams, name)
+        u, v = p['u'], p['v']
+        bu = u.get('b', jnp.zeros(u['w_q'].shape[-1], jnp.float32))
+        bv = v.get('b', jnp.zeros(v['w_q'].shape[-1], jnp.float32))
+        xq = jnp.zeros(e['in_shape'], jnp.int8)
+
+        def fused():
+            return ops.lowrank_conv_nhwc(
+                xq, u['w_q'], v['w_q'], u['scale'], v['scale'], bu, bv,
+                sx=e['sx'], h_scale=e['h_scale'], stride=e['stride'],
+                out_scale=e['out_scale'], h_qmax=qmax, out_qmax=qmax,
+                use_pallas=use_pallas)
+
+        def chained():
+            h = ops.quant_conv_static(
+                xq, u['w_q'], u['scale'], bu, sx=e['sx'], stride=e['stride'],
+                out_scale=e['h_scale'], out_qmax=qmax, use_pallas=use_pallas)
+            return ops.quant_conv_static(
+                h, v['w_q'], v['scale'], bv, sx=e['h_scale'],
+                out_scale=e['out_scale'], out_qmax=qmax,
+                use_pallas=use_pallas)
+
+        def best_us(f):
+            f().block_until_ready()      # compile outside the clock
+            ts = []
+            for _ in range(reps):
+                t0 = time.perf_counter()
+                f().block_until_ready()
+                ts.append((time.perf_counter() - t0) * 1e6)
+            return min(ts)
+
+        tf, tc = best_us(fused), best_us(chained)
+        e['selection'] = {'choice': 'fused' if tf <= tc else 'chained',
+                          'why': (f'measured fused {tf:.0f}us vs chained '
+                                  f'{tc:.0f}us'),
+                          'fused_us': tf, 'chained_us': tc}
+        e['fused'] = tf <= tc
+        e['launches'] = 1 if e['fused'] else 2
+
+
 def _resident_layers(plan: LayerPlan, use_pallas: bool, qparams=None):
     """Int8-resident layer implementations compiled from a LayerPlan.
 
@@ -343,8 +448,12 @@ def _resident_layers(plan: LayerPlan, use_pallas: bool, qparams=None):
     multiplies are folded into export-time constants
     (:func:`_fold_conv_consts`), leaving one int8→fp32 cast per conv.
 
-    Grouped convs are the declared fp32 fallback on both backends: QAct
-    in, fp32 out, re-quantized by the next glue.
+    Depthwise layers serve on the direct per-channel int8 kernel
+    (kernels/depthwise_conv.py) on the Pallas backend — QAct in, QAct out,
+    no fp32 in HBM — and on the scale-folded shift conv on CPU.  Only
+    grouped convs with per-group depth > 1 remain the declared fp32
+    fallback (QAct in, fp32 out, re-quantized by the next glue); none
+    exist in this repo's families.
     """
     qmax = plan.a_qmax
     fold = None if use_pallas else _fold_conv_consts(plan, qparams)
@@ -359,16 +468,14 @@ def _resident_layers(plan: LayerPlan, use_pallas: bool, qparams=None):
         e = plan.layers[name]
         xq = as_qact(x, e['sx'])
         if e['fallback']:
-            if not use_pallas and p['w_q'].shape[2] == 1:  # depthwise
-                f = fold[name]
-                return _depthwise_shift_conv(xq.q.astype(jnp.float32),
-                                             f['w'], stride) + f['b']
             return ref.quant_conv_ref(xq.q, p['w_q'], xq.scale, p['scale'],
                                       p.get('b'), stride=stride,
                                       groups=groups)
         if not use_pallas:
             f = fold[name]
             xf = xq.q.astype(jnp.float32)
+            if e.get('depthwise'):
+                return _depthwise_shift_conv(xf, f['w'], stride) + f['b']
             if e['factored']:
                 h = _conv_f32(xf, f['u_w'], stride) + f['u_b']
                 h_q = ref.requantize(h, e['h_scale'], qmax)
@@ -376,6 +483,12 @@ def _resident_layers(plan: LayerPlan, use_pallas: bool, qparams=None):
             else:
                 y = _conv_f32(xf, f['w'], stride) + f['b']
             return y                     # fp32-carry to this layer's glue
+        if e.get('depthwise'):
+            y = ops.depthwise_conv_static(
+                xq.q, p['w_q'], p['scale'], p.get('b'), sx=xq.scale,
+                stride=stride, out_scale=e['out_scale'], out_qmax=qmax,
+                use_pallas=True)
+            return QAct(y, e['out_scale'])
         if e['factored']:
             u, v = p['u'], p['v']
             bu = u.get('b', jnp.zeros(u['w_q'].shape[-1], jnp.float32))
@@ -572,14 +685,18 @@ def calibrate_exit_threshold(model: ServingModel, x, quantile=0.5):
 
 
 def export_cnn(params, cfg, *, use_pallas=None, calibrate=None,
-               fuse_lowrank=True) -> ServingModel:
+               fuse_lowrank=True, select_kernels='model') -> ServingModel:
     """Compile a (possibly chain-compressed) CNN to the int8 serving path.
 
     ``calibrate`` (a sample input batch) selects the int8-resident plan:
-    static activation scales, requantize epilogues, fused low-rank
-    launches (``fuse_lowrank=False`` forces the chained two-launch A/B).
-    ``calibrate=None`` keeps the dynamic-scale path (one abs-max per layer
-    per call, fp32 activations between layers).
+    static activation scales, requantize epilogues, and cost-selected
+    low-rank lowerings — ``select_kernels='model'`` prices fused vs
+    chained per factored layer with the analytic ``lowering_costs`` block
+    model, ``'measure'`` races both lowerings on the export backend,
+    ``'fused'`` forces the one-launch form (``fuse_lowrank=False`` forces
+    chained, the benchmark A/B).  ``calibrate=None`` keeps the
+    dynamic-scale path (one abs-max per layer per call, fp32 activations
+    between layers).
     """
     if use_pallas is None:
         use_pallas = jax.default_backend() == 'tpu'   # kernels are Mosaic-only
@@ -589,7 +706,10 @@ def export_cnn(params, cfg, *, use_pallas=None, calibrate=None,
     if calibrate is not None:
         a_qmax = 2.0 ** (a_bits - 1) - 1.0
         plan = _compile_layer_plan(params, cfg, calibrate, a_qmax,
-                                   fuse_lowrank=fuse_lowrank)
+                                   fuse_lowrank=fuse_lowrank,
+                                   select_kernels=select_kernels)
+        if select_kernels == 'measure' and fuse_lowrank:
+            _measure_lowrank_selection(plan, qparams, use_pallas)
         conv_fn, fc_fn, glue_fn, pool_fn = _resident_layers(
             plan, use_pallas, qparams=qparams)
         kw = dict(conv_fn=conv_fn, fc_fn=fc_fn, glue_fn=glue_fn,

@@ -11,10 +11,16 @@ Q at inference        ``quant_matmul.py`` — W8A8 int8 MXU matmul, fused
 Q at inference        ``quant_conv.py`` — NHWC conv lowered to int8 matmul
                       tiles via im2col K-axis accumulation (conv layers);
                       im2col gather indices are lru-cached per geometry
+Q at inference        ``depthwise_conv.py`` — direct (non-im2col) grouped/
+                      depthwise conv: per-channel int8 VPU MACs over the
+                      spatial window, shared requantize epilogue, bit-exact
+                      vs the lax.conv oracle (kills the fp32 fallback)
 L∘Q at inference      ``lowrank_conv.py`` — a factored (u, v) conv pair in
                       ONE launch: the rank-r intermediate lives in VMEM
                       scratch (lane-padded when r < 128), requantized on a
-                      static grid, bit-exact with the chained pair
+                      static grid, bit-exact with the chained pair; COUT is
+                      a grid axis, so any width fits; ``lowering_costs``
+                      prices fused vs chained for export-time selection
 Q during QAT          ``fake_quant.py`` — per-channel quantize→dequantize;
                       two-kernel amax→quantize, or ``fake_quant_fused``
                       (single HBM pass)
@@ -27,9 +33,11 @@ are static from export (PR 1); activation scales are static from a
 calibration batch, so no abs-max pass reads any activation at serve time.
 Kernel boundaries carry int8 — the requantize epilogue writes int8 to HBM
 and the next kernel consumes it with the producer's scale; fp32 appears
-only at the logit heads and the declared grouped-conv fallback.  The fused
-low-rank kernel is selected whenever the factored rank fits one 128 lane
-tile (``lowrank_conv.fits_fused``); wider ranks chain two launches.
+only at the logit heads (depthwise layers run the int8 kernel, so no conv
+falls back to fp32).  Factored layers inside the fused envelope
+(``lowrank_conv.fits_fused``: rank within one 128 lane tile) are priced
+fused-vs-chained per layer at export (``lowrank_conv.lowering_costs`` or
+wall-clock measurement); wider ranks always chain two launches.
 
 ``ops.py`` holds the jit'd public wrappers (interpret-mode on CPU, oracle
 fallbacks); ``ref.py`` the pure-jnp oracles every kernel is tested against;

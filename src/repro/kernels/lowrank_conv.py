@@ -10,7 +10,7 @@ bottleneck usually has r < 128, the second matmul wastes most of each
 
     patches (M, K1) @ u_q (K1, Rp)   -> int32 acc     (K1 grid axis)
     requantize(acc * sx*su + bu) / h_scale -> int8 h  (VMEM scratch only)
-    h (bm, Rp) @ v_q (Rp, N)         -> int32         (single MXU dot)
+    h (bm, Rp) @ v_q (Rp, bn)        -> int32         (per COUT tile)
     dequant + bias (+ReLU) (+requantize)              (epilogue)
 
 The r-dim intermediate lives entirely in VMEM scratch, zero-padded to the
@@ -20,12 +20,18 @@ matmul (padding is value-exact, and the whole launch is **bit-exact** with
 the chained quant_conv(u, out_scale=h_scale) → quant_conv(v) path: the
 int32 accumulation domains and the fp32 epilogue op order are identical).
 
-Grid is (M/bm, K1/bk); the COUT axis is served as one lane-padded block —
-v_q (Rp, Np), the scales and the (bm, Np) output tile all fit VMEM
-comfortably for CNN-scale widths (Np <= ~2048).  ``lowrank_conv`` asserts
-that budget instead of silently spilling; the layer-plan compiler
-(core/export.py) falls back to the chained path for larger layers or
-r > 128.
+Grid is (M/bm, K1/bk, N/bn) with the COUT axis innermost: the u-stage
+operands (patches block, u block) are indexed by (i, k) only, so they are
+fetched once per K step and never re-streamed while the N axis cycles; the
+int8 ``h`` scratch persists across N tiles, so the v stage is one
+(bm, Rp) x (Rp, bn) dot per COUT tile with zero recompute.  That removes
+the old whole-width (Rp, Np) v block and its VMEM assert — any COUT now
+fits (``fits_fused`` keeps only the rank envelope).  The one cost of this
+grid order: the (bm, bn) output block is revisited (and flushed) once per
+K step but only written on the last, so fused output traffic is n_k x the
+chained path's — ``lowering_costs`` below charges exactly that, and the
+layer-plan compiler (core/export.py) picks fused vs chained per layer from
+it instead of assuming fused always wins.
 
 All activation scales here are **static** Python floats captured at export
 calibration — no abs-max pass ever reads the activation tensor.
@@ -40,50 +46,103 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.kernels.quant_conv import im2col_nhwc
-from repro.kernels.tiling import fit_or_pad, pad_to
+from repro.kernels.tiling import VMEM_BUDGET, fit_or_pad, pad_to
 
-# conservative VMEM ceiling for the non-gridded (Rp, Np)/(bm, Np) operands
-_VMEM_BYTES = 8 * 2 ** 20
+# Serving-cost constants for lowering_costs (TPU v5e, cf. benchmarks/
+# roofline.py): int8 MXU peak 394 TOP/s = 197e6 MACs/us, HBM 819 GB/s =
+# 819e3 bytes/us, and ~2us of per-launch dispatch overhead — the term the
+# two-launch chained path pays twice.
+MACS_PER_US = 197e6
+BYTES_PER_US = 819e3
+LAUNCH_US = 2.0
 
 
 def fits_fused(r: int, cout: int, *, bm: int = 128) -> bool:
     """Can a factored (u, v) pair with this rank/width serve as ONE launch?
 
-    True when the lane-padded rank fits a single 128-wide K tile (the
-    bit-exactness envelope) and the whole-COUT v block + output tile fit
-    the VMEM budget.  The layer-plan compiler (core/export.py) chains the
-    two kernels when this is False.
+    True when the lane-padded rank fits a single 128-wide K tile for the v
+    matmul — the bit-exactness envelope (one int32 dot over the whole rank,
+    the same accumulation domain as the chained path's single K tile).
+    COUT no longer matters: the N axis is a grid dimension, so any width
+    streams through (bm, bn) tiles against the persistent h scratch.  The
+    layer-plan compiler (core/export.py) chains the two kernels when this
+    is False — and even when it is True, picks fused vs chained by
+    :func:`lowering_costs`, not by fiat.
     """
-    rp, np_ = pad_to(r), pad_to(cout)
-    return (rp <= 128 and rp <= _VMEM_BYTES // 4 // bm
-            and (rp * np_ + 4 * bm * np_) <= _VMEM_BYTES)
+    del cout, bm   # kept for API compat: width/M-tile no longer constrain
+    return pad_to(r) <= 128
+
+
+def lowering_costs(m: int, k1: int, r: int, n: int, *, bm: int = 128,
+                   bk: int = 256, bn: int = 128) -> dict:
+    """Analytic cost (us) of serving one factored conv fused vs chained.
+
+    Models the exact block geometry both lowerings run (same fit_or_pad /
+    pad_to tiling as the kernels): MAC count is identical, so the decision
+    is traffic + launches.  Fused pays n_k spurious output flushes (the
+    (bm, bn) block is revisited per K step, written only on the last) but
+    streams the u-stage operands once and never round-trips h through HBM;
+    chained pays a second launch and the (M, Rp) h write+read but flushes
+    each output block exactly once.  Per-launch time is the roofline max of
+    its compute and traffic terms; the chained total is the sum of its two
+    launches.  Used by core/export.py ``select_kernels='model'`` (the
+    default) — 'measure' mode times the two lowerings instead.
+    """
+    (bm, mp), (bk, k1p) = fit_or_pad(bm, m), fit_or_pad(bk, k1)
+    (bn, np_) = fit_or_pad(bn, n)
+    rp = pad_to(r)
+    n_m, n_k, n_n = mp // bm, k1p // bk, np_ // bn
+    macs_u = mp * k1p * rp          # padded-domain MACs, what the MXU runs
+    macs_v = mp * rp * np_
+    fused_bytes = (mp * k1p              # patches: once per (i, k), N inner
+                   + n_m * k1p * rp     # u re-streamed per M tile
+                   + n_m * rp * np_     # v re-streamed per M tile
+                   + n_k * mp * np_)    # output flushed once per K revisit
+    chained_bytes_u = mp * k1p + n_m * k1p * rp + mp * rp
+    chained_bytes_v = mp * rp + n_m * rp * np_ + mp * np_
+    fused_us = LAUNCH_US + max((macs_u + macs_v) / MACS_PER_US,
+                               fused_bytes / BYTES_PER_US)
+    chained_us = (2 * LAUNCH_US
+                  + max(macs_u / MACS_PER_US, chained_bytes_u / BYTES_PER_US)
+                  + max(macs_v / MACS_PER_US, chained_bytes_v / BYTES_PER_US))
+    return {'fused_us': fused_us, 'chained_us': chained_us,
+            'fused_bytes': fused_bytes,
+            'chained_bytes': chained_bytes_u + chained_bytes_v,
+            'macs': macs_u + macs_v}
 
 
 def _lr_kernel(x_ref, u_ref, su_ref, bu_ref, v_ref, sv_ref, bv_ref, o_ref,
-               acc_ref, *, n_k, sx, h_scale, h_qmax, relu, out_scale,
+               acc_ref, hq_ref, *, n_k, sx, h_scale, h_qmax, relu, out_scale,
                out_qmax):
     k = pl.program_id(1)
+    n = pl.program_id(2)
 
-    @pl.when(k == 0)
+    @pl.when((k == 0) & (n == 0))
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    acc_ref[...] += jax.lax.dot_general(
-        x_ref[...], u_ref[...], (((1,), (0,)), ((), ())),
-        preferred_element_type=jnp.int32)
+    @pl.when(n == 0)   # u-stage accumulation: once per K step, not per tile
+    def _accum():
+        acc_ref[...] += jax.lax.dot_general(
+            x_ref[...], u_ref[...], (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.int32)
 
-    @pl.when(k == n_k - 1)
-    def _done():
+    @pl.when((k == n_k - 1) & (n == 0))
+    def _requant():
         # u epilogue: dequant + bias, then static requantize to int8 — the
         # same fp32 op order as quant_matmul's epilogue, so the fused and
-        # chained paths agree bit-for-bit.
+        # chained paths agree bit-for-bit.  h persists in scratch across
+        # the whole N sweep.
         h = acc_ref[...].astype(jnp.float32) * (sx * su_ref[...][None, :])
         h = h + bu_ref[...][None, :]
-        h_q = jnp.clip(jnp.round(h / h_scale), -h_qmax - 1.0,
-                       h_qmax).astype(jnp.int8)
-        # v stage: the rank-dim matmul never leaves VMEM
+        hq_ref[...] = jnp.clip(jnp.round(h / h_scale), -h_qmax - 1.0,
+                               h_qmax).astype(jnp.int8)
+
+    @pl.when(k == n_k - 1)
+    def _vstage():
+        # v stage, one COUT tile: the rank-dim matmul never leaves VMEM
         acc2 = jax.lax.dot_general(
-            h_q, v_ref[...], (((1,), (0,)), ((), ())),
+            hq_ref[...], v_ref[...], (((1,), (0,)), ((), ())),
             preferred_element_type=jnp.int32)
         y = acc2.astype(jnp.float32) * (h_scale * sv_ref[...][None, :])
         y = y + bv_ref[...][None, :]
@@ -95,10 +154,10 @@ def _lr_kernel(x_ref, u_ref, su_ref, bu_ref, v_ref, sv_ref, bv_ref, o_ref,
 
 
 @functools.partial(jax.jit, static_argnames=(
-    'sx', 'h_scale', 'stride', 'relu', 'bm', 'bk', 'out_dtype', 'interpret',
-    'out_scale', 'h_qmax', 'out_qmax'))
+    'sx', 'h_scale', 'stride', 'relu', 'bm', 'bk', 'bn', 'out_dtype',
+    'interpret', 'out_scale', 'h_qmax', 'out_qmax'))
 def lowrank_conv(x_q, u_q, v_q, su, sv, bu, bv, *, sx, h_scale, stride=1,
-                 relu=False, bm=128, bk=256, out_dtype=jnp.float32,
+                 relu=False, bm=128, bk=256, bn=128, out_dtype=jnp.float32,
                  interpret=False, out_scale=None, h_qmax=127.0,
                  out_qmax=127.0):
     """One-launch factored conv: x_q int8 (B,H,W,CIN) -> (B,OH,OW,COUT).
@@ -108,6 +167,8 @@ def lowrank_conv(x_q, u_q, v_q, su, sv, bu, bv, *, sx, h_scale, stride=1,
     biases (pass zeros when absent).  ``sx`` / ``h_scale`` / ``out_scale``
     are *static* Python floats: the input activation scale, the rank-
     intermediate requantize scale, and (optionally) the int8 output scale.
+    COUT is gridded in ``bn`` tiles (any width serves); the rank must fit
+    one lane tile (``fits_fused``).
     """
     B, H, W, C = x_q.shape
     kh, kw, c2, r = u_q.shape
@@ -120,9 +181,12 @@ def lowrank_conv(x_q, u_q, v_q, su, sv, bu, bv, *, sx, h_scale, stride=1,
     k1 = kh * kw * C
 
     (bm, mp), (bk, k1p) = fit_or_pad(bm, m), fit_or_pad(bk, k1)
-    rp, np_ = pad_to(r), pad_to(n)
-    assert rp <= _VMEM_BYTES // 4 // bm, (rp, bm)
-    assert (rp * np_ + 4 * bm * np_) <= _VMEM_BYTES, (rp, np_, bm)
+    (bn, np_) = fit_or_pad(bn, n)
+    rp = pad_to(r)
+    assert rp <= 128, (r, 'rank exceeds the fused envelope; chain instead')
+    # resident per grid step: x/u/v blocks + int32 acc + int8 h + out tile
+    assert (bm * bk + bk * rp + rp * bn + 4 * bm * rp + bm * rp
+            + 4 * bm * bn) <= VMEM_BUDGET, (bm, bk, bn, rp)
     if (mp, k1p) != (m, k1):
         patches = jnp.pad(patches, ((0, mp - m), (0, k1p - k1)))
     u2 = jnp.pad(u_q.reshape(k1, r), ((0, k1p - k1), (0, rp - r)))
@@ -133,7 +197,7 @@ def lowrank_conv(x_q, u_q, v_q, su, sv, bu, bv, *, sx, h_scale, stride=1,
     bv = jnp.pad(bv.astype(jnp.float32), (0, np_ - n))
 
     n_k = k1p // bk
-    grid = (mp // bm, n_k)
+    grid = (mp // bm, n_k, np_ // bn)
     if out_scale is not None:
         out_scale, out_dtype = float(out_scale), jnp.int8
     out = pl.pallas_call(
@@ -143,17 +207,18 @@ def lowrank_conv(x_q, u_q, v_q, su, sv, bu, bv, *, sx, h_scale, stride=1,
                           out_qmax=float(out_qmax)),
         grid=grid,
         in_specs=[
-            pl.BlockSpec((bm, bk), lambda i, k: (i, k)),
-            pl.BlockSpec((bk, rp), lambda i, k: (k, 0)),
-            pl.BlockSpec((rp,), lambda i, k: (0,)),
-            pl.BlockSpec((rp,), lambda i, k: (0,)),
-            pl.BlockSpec((rp, np_), lambda i, k: (0, 0)),
-            pl.BlockSpec((np_,), lambda i, k: (0,)),
-            pl.BlockSpec((np_,), lambda i, k: (0,)),
+            pl.BlockSpec((bm, bk), lambda i, k, j: (i, k)),
+            pl.BlockSpec((bk, rp), lambda i, k, j: (k, 0)),
+            pl.BlockSpec((rp,), lambda i, k, j: (0,)),
+            pl.BlockSpec((rp,), lambda i, k, j: (0,)),
+            pl.BlockSpec((rp, bn), lambda i, k, j: (0, j)),
+            pl.BlockSpec((bn,), lambda i, k, j: (j,)),
+            pl.BlockSpec((bn,), lambda i, k, j: (j,)),
         ],
-        out_specs=pl.BlockSpec((bm, np_), lambda i, k: (i, 0)),
+        out_specs=pl.BlockSpec((bm, bn), lambda i, k, j: (i, j)),
         out_shape=jax.ShapeDtypeStruct((mp, np_), out_dtype),
-        scratch_shapes=[pltpu.VMEM((bm, rp), jnp.int32)],
+        scratch_shapes=[pltpu.VMEM((bm, rp), jnp.int32),
+                        pltpu.VMEM((bm, rp), jnp.int8)],
         interpret=interpret,
     )(patches, u2, su, bu, v2, sv, bv)
     return out[:m, :n].reshape(B, oh, ow, n)

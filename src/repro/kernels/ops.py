@@ -15,12 +15,16 @@ Serving entry points (consumed by core/export.py):
   (the PR-1 exported path: one abs-max pass per layer, fp32 between
   layers).
 * :func:`quant_conv_static` / :func:`quant_dense_static` /
-  :func:`lowrank_conv_nhwc` — the int8-resident path: activations arrive
-  already int8 on a *static* scale captured at export calibration, and the
-  requantize epilogue (``out_scale``) keeps them int8 on the way out.
-  ``lowrank_conv_nhwc`` serves a factored (u, v) conv pair as ONE Pallas
-  launch (kernels/lowrank_conv.py); its jnp fallback chains the two convs
-  with identical requantize math.
+  :func:`depthwise_conv_static` / :func:`lowrank_conv_nhwc` — the
+  int8-resident path: activations arrive already int8 on a *static* scale
+  captured at export calibration, and the requantize epilogue
+  (``out_scale``) keeps them int8 on the way out.
+  ``depthwise_conv_static`` serves grouped/depthwise convs on the direct
+  per-channel kernel (kernels/depthwise_conv.py) — there is no fp32
+  fallback left on the resident path.  ``lowrank_conv_nhwc`` serves a
+  factored (u, v) conv pair as ONE Pallas launch
+  (kernels/lowrank_conv.py); its jnp fallback chains the two convs with
+  identical requantize math.
 """
 from __future__ import annotations
 
@@ -29,6 +33,8 @@ import jax.numpy as jnp
 
 from repro.kernels import ref
 from repro.kernels.decode_attention import decode_attention as _pallas_decode
+from repro.kernels.depthwise_conv import depthwise_conv as _pallas_dw_conv
+from repro.kernels.depthwise_conv import fits_depthwise
 from repro.kernels.fake_quant import fake_quant as _pallas_fake_quant
 from repro.kernels.fake_quant import fake_quant_fused as _pallas_fq_fused
 from repro.kernels.lowrank_conv import lowrank_conv as _pallas_lr_conv
@@ -61,8 +67,9 @@ def fake_quant(w, bits=8, *, use_pallas=True, fused=None, **kw):
     if not use_pallas:
         return ref.fake_quant_ref(w, bits)
     if fused is None:
+        from repro.kernels.tiling import VMEM_BUDGET
         bn = kw.get('bn', 256)
-        fused = w.shape[0] * min(bn, w.shape[1]) * 4 <= 4 * 2 ** 20
+        fused = w.shape[0] * min(bn, w.shape[1]) * 4 <= VMEM_BUDGET // 2
     if fused:
         kw.pop('bk', None)
         return _pallas_fq_fused(w, bits=bits, interpret=_interpret(), **kw)
@@ -146,11 +153,17 @@ def quant_conv_nhwc(x, w_q, sw, bias=None, *, stride=1, groups=1, relu=False,
 
     x fp32 (B,H,W,CIN); w_q int8 (KH,KW,CIN,COUT); sw (COUT,) static.
     Activations get one dynamic per-tensor scale (the QAT grid).  Grouped
-    convs (depthwise) fall back to a dequantized lax.conv — block-diagonal
-    im2col would waste ~CIN x of MXU tiles on them.
+    convs with per-group depth 1 (depthwise, any channel multiplier) serve
+    on the direct per-channel kernel (kernels/depthwise_conv.py) — im2col
+    would waste ~CIN x of MXU tiles on their block-diagonal structure.
+    Only per-group depth > 1 (absent from this repo's families) still
+    dequantizes through lax.conv.
     """
     xq, sx = quantize_act(x, a_bits=a_bits)
     if groups > 1:
+        if use_pallas and fits_depthwise(w_q.shape):
+            return _pallas_dw_conv(xq, w_q, sx, sw, bias, stride=stride,
+                                   relu=relu, interpret=_interpret())
         return ref.quant_conv_ref(xq, w_q, sx, sw, bias, stride=stride,
                                   relu=relu, groups=groups)
     if not use_pallas:
@@ -179,6 +192,28 @@ def quant_conv_static(x_q, w_q, sw, bias=None, *, sx, stride=1, relu=False,
     return _pallas_qconv(x_q, w_q, sx, sw, bias, stride=stride, relu=relu,
                          out_scale=out_scale, out_qmax=out_qmax,
                          interpret=_interpret(), **kw)
+
+
+def depthwise_conv_static(x_q, w_q, sw, bias=None, *, sx, stride=1,
+                          relu=False, out_scale=None, out_qmax=127.0,
+                          use_pallas=True, **kw):
+    """Int8 depthwise/grouped conv on a statically-quantized activation.
+
+    The resident-path twin of :func:`quant_conv_static` for grouped convs
+    with per-group input depth 1: x_q int8 (B,H,W,CIN) on the static grid
+    ``sx``; w_q int8 (KH,KW,1,COUT) with COUT a multiple of CIN.  Serves on
+    the direct per-channel Pallas kernel — int8 MACs, shared requantize
+    epilogue, bit-exact vs ref.depthwise_conv_ref — so MobileNet's
+    depthwise layers are int8-in/int8-out like every other resident layer
+    (the old fp32 lax.conv fallback is gone).
+    """
+    if not use_pallas:
+        return ref.depthwise_conv_ref(x_q, w_q, sx, sw, bias, stride=stride,
+                                      relu=relu, out_scale=out_scale,
+                                      out_qmax=out_qmax)
+    return _pallas_dw_conv(x_q, w_q, sx, sw, bias, stride=stride, relu=relu,
+                           out_scale=out_scale, out_qmax=out_qmax,
+                           interpret=_interpret(), **kw)
 
 
 def quant_dense_static(x_q, w_q, sw, bias=None, *, sx, relu=False,

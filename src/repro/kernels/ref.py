@@ -1,6 +1,8 @@
 """Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
 from __future__ import annotations
 
+import functools
+
 import jax
 import jax.numpy as jnp
 
@@ -49,6 +51,43 @@ def quant_conv_ref(x_q, w_q, sx, sw, bias=None, *, stride=1, relu=False,
         dimension_numbers=('NHWC', 'HWIO', 'NHWC'))
     if bias is not None:
         y = y + bias.astype(jnp.float32)
+    if relu:
+        y = jnp.maximum(y, 0.0)
+    if out_scale is not None:
+        return requantize(y, out_scale, out_qmax)
+    return y.astype(out_dtype)
+
+
+@functools.partial(jax.jit, static_argnames=('stride', 'relu', 'out_dtype',
+                                             'out_scale', 'out_qmax'))
+def depthwise_conv_ref(x_q, w_q, sx, sw, bias=None, *, stride=1, relu=False,
+                       out_dtype=jnp.float32, out_scale=None, out_qmax=127.0):
+    """lax.conv oracle for kernels/depthwise_conv.depthwise_conv, BIT-exact.
+
+    Unlike :func:`quant_conv_ref` (which dequantizes before the conv), this
+    accumulates on the *raw integer codes*: fp32 holds every depthwise
+    partial sum exactly (<= KH*KW*127^2 << 2^24), so the lax.conv
+    accumulation equals the kernel's int32 accumulation bit-for-bit, and
+    the epilogue applies the identical fp32 op order — ``acc * (sx * sw)``,
+    bias, ReLU, requantize.  x_q int8 (B,H,W,CIN); w_q int8 (KH,KW,1,COUT)
+    with COUT a multiple of CIN (feature_group_count = CIN).
+
+    Jitted on purpose: op-by-op dispatch compiles ``acc * scale + bias``
+    without the fused multiply-add contraction XLA applies inside a traced
+    program, which perturbs the fp32 result by ~1 ulp vs the (also
+    compiled) Pallas kernel.  With both sides compiled the contraction is
+    identical and the fp32 outputs agree bit-for-bit (the int8
+    ``out_scale`` outputs agree either way — rounding absorbs the ulp).
+    """
+    groups = x_q.shape[-1]
+    acc = jax.lax.conv_general_dilated(
+        x_q.astype(jnp.float32), w_q.astype(jnp.float32), (stride, stride),
+        'SAME', feature_group_count=groups,
+        dimension_numbers=('NHWC', 'HWIO', 'NHWC'))
+    scale = jnp.asarray(sx, jnp.float32) * sw.astype(jnp.float32)
+    y = acc * scale[None, None, None, :]
+    if bias is not None:
+        y = y + bias.astype(jnp.float32)[None, None, None, :]
     if relu:
         y = jnp.maximum(y, 0.0)
     if out_scale is not None:

@@ -17,6 +17,14 @@ from __future__ import annotations
 LANE = 128          # TPU lane width: last-dim tiles are always 128 wide
 SUBLANE = 8         # TPU sublane width: second-minor tiles pack 8 rows
 
+# THE shared VMEM budget every kernel in this package sizes its resident
+# blocks against (conservative half of a v5e core's ~16 MiB, leaving room
+# for double buffering).  One constant, not N per-kernel copies: a kernel
+# that needs operands resident across grid steps (lowrank_conv's v block,
+# fake_quant's fused column stripe, depthwise_conv's spatial plane) checks
+# against this and falls back / grids further instead of silently spilling.
+VMEM_BUDGET = 8 * 2 ** 20
+
 
 def pad_to(dim: int, mult: int = LANE) -> int:
     """Next multiple of ``mult`` >= dim (dim itself when it already is)."""

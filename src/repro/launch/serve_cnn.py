@@ -129,6 +129,7 @@ def main():
         s = model.summary()
         print(f'layer plan: {s["kernel_launches"]} kernel launches, '
               f'{s["n_fused_lowrank"]} fused low-rank, '
+              f'{s["n_depthwise"]} depthwise, '
               f'fallback MACs {s["fallback_mac_fraction"]:.1%}')
     if args.server:
         return _serve_trace(model, fam, cfg, args)

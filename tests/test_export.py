@@ -250,8 +250,9 @@ def test_export_resident_no_dynamic_activation_scales():
 def test_export_resident_int8_at_kernel_boundaries(kind):
     """Dtype-trace the resident Pallas serving fn: every kernel consumes
     int8 activations and every kernel output is int8, except the fp32
-    logit heads (head + exit fcs) and the declared grouped-conv fallback
-    layers (counted against the plan)."""
+    logit heads (head + exit fcs).  With the depthwise kernel serving
+    mobilenet's grouped convs there is NO fp32 conv left in the graph —
+    zero fallback, zero fp32 MACs (the fallback exemption is gone)."""
     _, params, cfg = _with_exits(CONFIGS[kind])
     x = jax.random.normal(jax.random.key(1), (2, 32, 32, 3))
     model = export_cnn(params, cfg, use_pallas=True, calibrate=x)
@@ -267,12 +268,14 @@ def test_export_resident_int8_at_kernel_boundaries(kind):
     n_heads = 1 + len(model.cfg.exit_stages)        # final + exit logits
     assert n_fp32 == n_heads, (n_fp32, n_heads)
     assert all(d in (jnp.int8, jnp.float32) for d in out_dtypes)
-    # declared fallbacks are the only fp32 convs left in the graph
-    n_fallback_convs = sum(
+    # zero fp32 convs in the resident graph — every conv (incl. mobilenet
+    # depthwise) runs an int8 Pallas kernel
+    assert model.summary()['n_fallback'] == 0
+    n_fp32_convs = sum(
         1 for e in _walk_eqns(jaxpr.jaxpr)
         if e.primitive.name == 'conv_general_dilated'
         and e.outvars[0].aval.dtype == jnp.float32)
-    assert n_fallback_convs == model.summary()['n_fallback']
+    assert n_fp32_convs == 0, n_fp32_convs
 
 
 def test_export_resident_factored_single_launch():
@@ -309,19 +312,52 @@ def test_export_resident_factored_single_launch():
 
 
 def test_export_resident_fallback_mac_fraction():
-    """Mobilenet's depthwise convs stay on the declared fp32 fallback; the
-    plan summary makes their MAC share explicit (and nonzero)."""
+    """Mobilenet's depthwise convs serve on the int8 depthwise kernel now:
+    the declared-fallback MAC share the summary used to report (~21%) is
+    exactly zero, and the plan counts the layers as depthwise instead."""
     cfg = MOBILENET_SMALL_CIFAR.replace(w_bits=8, a_bits=8)
     params = init_cnn(jax.random.key(0), cfg)
     x = jax.random.normal(jax.random.key(1), (2, 32, 32, 3))
     s = export_cnn(params, cfg, calibrate=x).summary()
-    assert s['n_fallback'] > 0
-    assert 0.0 < s['fallback_mac_fraction'] < 1.0
-    # resnet has no grouped convs: fraction must be exactly zero
+    assert s['n_fallback'] == 0
+    assert s['fallback_mac_fraction'] == 0.0
+    assert s['n_depthwise'] > 0
+    # resnet has no grouped convs at all
     cfg_r = RESNET8_CIFAR.replace(w_bits=8, a_bits=8)
     s_r = export_cnn(init_cnn(jax.random.key(0), cfg_r), cfg_r,
                      calibrate=x).summary()
     assert s_r['fallback_mac_fraction'] == 0.0
+    assert s_r['n_depthwise'] == 0
+
+
+def test_export_kernel_selection_recorded():
+    """Every factored conv's plan entry records the fused-vs-chained
+    decision with costs and a reason; 'model' (default) never contradicts
+    the analytic model, 'fused'/fuse_lowrank=False force the lowerings."""
+    cfg = RESNET8_CIFAR.replace(w_bits=8, a_bits=8)
+    fam = CNNFamily(SyntheticImages())
+    params = fam.init(jax.random.key(0), cfg)
+    params, _, _ = fam.factorize(params, cfg, energy=0.6, min_rank=2)
+    x = jax.random.normal(jax.random.key(1), (2, 16, 16, 3))
+    s = export_cnn(params, cfg, calibrate=x).summary()
+    sels = s['lowrank_selection']
+    assert sels, 'factored export must record selections'
+    for name, sel in sels.items():
+        assert sel['choice'] in ('fused', 'chained')
+        assert sel['why']
+        if 'fused_us' in sel:   # modeled: choice must match the costs
+            modeled = ('fused' if sel['fused_us'] <= sel['chained_us']
+                       else 'chained')
+            assert sel['choice'] == modeled, (name, sel)
+    forced = export_cnn(params, cfg, calibrate=x,
+                        fuse_lowrank=False).summary()
+    assert all(v['choice'] == 'chained'
+               for v in forced['lowrank_selection'].values())
+    assert forced['n_fused_lowrank'] == 0
+    pinned = export_cnn(params, cfg, calibrate=x,
+                        select_kernels='fused').summary()
+    assert all(v['choice'] == 'fused'
+               for v in pinned['lowrank_selection'].values())
 
 
 def test_export_chain_threads_exit_threshold():

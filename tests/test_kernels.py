@@ -8,6 +8,7 @@ import pytest
 
 from repro.kernels import ops, ref
 from repro.kernels.decode_attention import decode_attention
+from repro.kernels.depthwise_conv import depthwise_conv, fits_depthwise
 from repro.kernels.fake_quant import fake_quant
 from repro.kernels.quant_matmul import quant_matmul
 
@@ -117,3 +118,73 @@ def test_decode_attention_int8_kv(B, H, K, D, S):
         jnp.broadcast_to(valid, (B, S)))
     np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
                                rtol=1e-4, atol=1e-5)
+
+
+# ---------------------------------------------------------- depthwise_conv
+
+
+def _dw_case(C, mult, seed=0, B=2, H=9, W=11, kh=3, kw=3):
+    k = jax.random.key(seed)
+    n = C * mult
+    x = jax.random.randint(k, (B, H, W, C), -128, 128, jnp.int8)
+    w = jax.random.randint(jax.random.fold_in(k, 1), (kh, kw, 1, n),
+                           -128, 128, jnp.int8)
+    sw = jax.random.uniform(jax.random.fold_in(k, 2), (n,), jnp.float32,
+                            1e-3, 1e-2)
+    b = jax.random.normal(jax.random.fold_in(k, 3), (n,)) * 0.1
+    return x, w, sw, b
+
+
+@pytest.mark.parametrize('C,mult', [(32, 1), (33, 1), (7, 2), (130, 1),
+                                    (8, 4)])
+@pytest.mark.parametrize('stride', [1, 2])
+def test_depthwise_conv_bit_exact_oracle(C, mult, stride):
+    """Direct depthwise kernel == lax.conv oracle on raw integer codes,
+    bit-for-bit (not allclose): strides, channel multipliers, odd/wide
+    channel counts all pad value-exactly."""
+    x, w, sw, b = _dw_case(C, mult, seed=C * 7 + stride)
+    out = depthwise_conv(x, w, 0.013, sw, b, stride=stride, relu=True,
+                         interpret=True)
+    expect = ref.depthwise_conv_ref(x, w, 0.013, sw, b, stride=stride,
+                                    relu=True)
+    assert out.shape == expect.shape
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(expect))
+
+
+@pytest.mark.parametrize('stride', [1, 2])
+def test_depthwise_conv_requantize_epilogue(stride):
+    """out_scale produces int8 on the static grid, bit-exact with the
+    oracle's requantize — the int8-in/int8-out serving contract."""
+    x, w, sw, b = _dw_case(32, 1, seed=5)
+    out = depthwise_conv(x, w, 0.01, sw, b, stride=stride, out_scale=0.02,
+                         interpret=True)
+    expect = ref.depthwise_conv_ref(x, w, 0.01, sw, b, stride=stride,
+                                    out_scale=0.02)
+    assert out.dtype == jnp.int8
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(expect))
+
+
+def test_depthwise_conv_no_bias_and_fits():
+    """bias=None serves (zero bias injected); fits_depthwise admits exactly
+    the per-group-depth-1 weight shapes."""
+    x, w, sw, _ = _dw_case(16, 1, seed=9)
+    out = depthwise_conv(x, w, 0.01, sw, None, interpret=True)
+    expect = ref.depthwise_conv_ref(x, w, 0.01, sw, None)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(expect))
+    assert fits_depthwise((3, 3, 1, 64)) and fits_depthwise((5, 5, 1, 7))
+    assert not fits_depthwise((3, 3, 4, 64))   # per-group depth > 1
+    assert not fits_depthwise((3, 3, 64))      # not a conv weight
+
+
+def test_depthwise_conv_static_entry():
+    """ops.depthwise_conv_static (the resident-path entry) matches its ref
+    on both backends — the kernel path bit-exactly."""
+    x, w, sw, b = _dw_case(24, 1, seed=11)
+    expect = ref.depthwise_conv_ref(x, w, 0.012, sw, b, stride=2,
+                                    out_scale=0.03)
+    got_k = ops.depthwise_conv_static(x, w, sw, b, sx=0.012, stride=2,
+                                      out_scale=0.03, use_pallas=True)
+    got_r = ops.depthwise_conv_static(x, w, sw, b, sx=0.012, stride=2,
+                                      out_scale=0.03, use_pallas=False)
+    np.testing.assert_array_equal(np.asarray(got_k), np.asarray(expect))
+    np.testing.assert_array_equal(np.asarray(got_r), np.asarray(expect))

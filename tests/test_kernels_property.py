@@ -51,3 +51,24 @@ def test_decode_attention_mask_property(seed, frac):
                                      jnp.ones((B, n), bool))
     np.testing.assert_allclose(np.asarray(out), np.asarray(trunc),
                                rtol=1e-4, atol=1e-5)
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), c=st.integers(1, 40),
+       mult=st.sampled_from([1, 2, 4]), stride=st.sampled_from([1, 2]))
+def test_depthwise_conv_bit_exact_property(seed, c, mult, stride):
+    """For ANY channel count / multiplier / stride, the direct depthwise
+    kernel is bit-identical to the lax.conv oracle on raw integer codes."""
+    from repro.kernels.depthwise_conv import depthwise_conv
+    k = jax.random.key(seed)
+    n = c * mult
+    x = jax.random.randint(k, (1, 7, 8, c), -128, 128, jnp.int8)
+    w = jax.random.randint(jax.random.fold_in(k, 1), (3, 3, 1, n),
+                           -128, 128, jnp.int8)
+    sw = jax.random.uniform(jax.random.fold_in(k, 2), (n,), jnp.float32,
+                            1e-3, 1e-2)
+    out = depthwise_conv(x, w, 0.01, sw, None, stride=stride,
+                         out_scale=0.05, interpret=True)
+    expect = ref.depthwise_conv_ref(x, w, 0.01, sw, None, stride=stride,
+                                    out_scale=0.05)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(expect))
