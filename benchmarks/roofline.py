@@ -46,22 +46,20 @@ def int8_serving_roofline(plan_layers: dict) -> dict:
     (``depthwise_bytes`` / ``depthwise_traffic_fraction``) instead of
     hiding in a fallback bucket.
     """
+    # byte accounting is shared with the static analyzer's hlo-traffic
+    # rule (repro/analysis/traffic.py) — one implementation, enforced at
+    # export AND reported here
+    from repro.analysis.traffic import boundary_bytes
+    bb = boundary_bytes(plan_layers)
+    elems_in, elems_out = bb['elems_in'], bb['elems_out']
     macs = sum(e['macs'] for e in plan_layers.values())
-    elems_in = sum(_prod(e['in_shape']) for e in plan_layers.values())
-    elems_out = sum(_prod(e['out_shape']) for e in plan_layers.values())
     batch = next(iter(plan_layers.values()))['in_shape'][0]
     flops = 2.0 * macs * batch
     t_c = flops / INT8_PEAK_FLOPS
     # fp32 path: read + write each layer boundary in fp32, plus the
     # dynamic abs-max pass re-reading every layer input
     t_m_fp32 = (4.0 * elems_in + 4.0 * elems_out + 4.0 * elems_in) / HBM_BW
-    int8_bytes = dw_bytes = 0.0
-    for e in plan_layers.values():
-        out_b = 4.0 if e.get('fallback') else 1.0   # fallback emits fp32
-        layer = _prod(e['in_shape']) + out_b * _prod(e['out_shape'])
-        int8_bytes += layer
-        if e.get('depthwise'):
-            dw_bytes += layer
+    int8_bytes, dw_bytes = bb['int8_bytes'], bb['depthwise_bytes']
     t_m_int8 = int8_bytes / HBM_BW
     return {
         'compute_s': t_c,

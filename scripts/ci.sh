@@ -26,11 +26,11 @@ python examples/quickstart.py --smoke
 # serving-benchmark smoke: times the fake-quant / dynamic-int8 /
 # int8-resident paths (incl. the fused low-rank variant) on a tiny batch —
 # catches export-plan regressions that only bite at serve time.  Also
-# asserts the zero-fp32 contract (mobilenet's plan must report
-# fallback_mac_fraction == 0 — depthwise serves on the int8 kernel) and
-# kernel-selection consistency (a measure-mode export never records a
-# fused/chained choice its own timings say is slower).  Writes no BENCH
-# file (the committed BENCH_serving.json comes from a full run).
+# runs the analyzer's int8-residency and launch-budget rules over the
+# exports (mobilenet must have no needless fallback; a measure-mode export
+# never records a fused/chained choice its own timings say is slower).
+# Writes no BENCH file (the committed BENCH_serving.json comes from a full
+# run).
 python benchmarks/serving_int8.py --smoke
 
 # serving-runtime smoke: a tiny Poisson trace through the continuous-
@@ -38,5 +38,12 @@ python benchmarks/serving_int8.py --smoke
 # is bit-exact vs the monolithic model serving it alone at the same slot
 # geometry (the early-exit compaction contract).  Writes no BENCH file.
 python benchmarks/serving_load.py --smoke
+
+# static-analysis gate (repro/analysis): every rule must be green on the
+# shipped exports of all three CNN kinds (both backends + the theoretical
+# sequence) AND red on its deliberately-mutated export — a rule that stops
+# firing on its own mutant fails CI even while everything stays green.
+# Any error-severity finding on a clean export exits non-zero here.
+python -m repro.analysis.gate
 
 exec python -m pytest -x -q "$@"

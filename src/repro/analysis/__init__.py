@@ -1,0 +1,26 @@
+"""Static verification layer: graph contracts for every export.
+
+``analysis.check(model, sequence=..., ...)`` walks exported serving jaxprs
+and optimized HLO — executing nothing — and enforces the repo's hard-won
+guarantees as registered, typed rules (see README.md here):
+int8-residency, vmem-fit, launch-budget, stage-carry, order-dag,
+hlo-traffic.  Wired into ``export_cnn(..., verify=)``,
+``launch/serve_cnn.py --verify``, and the ``scripts/ci.sh`` gate
+(``python -m repro.analysis.gate``), which also proves every rule live
+against the deliberately-broken exports in :mod:`.mutations`.
+"""
+from repro.analysis.report import (SEVERITIES, AnalysisError, AnalysisReport,
+                                   Finding)
+from repro.analysis.rules import (AnalysisContext, AnalysisRule, check,
+                                  get_rule, register_rule, registered_rules,
+                                  unregister_rule)
+from repro.analysis.walker import (pallas_call_name, pallas_call_vmem_bytes,
+                                   pallas_calls, prim_count, walk_eqns)
+
+__all__ = [
+    'SEVERITIES', 'AnalysisError', 'AnalysisReport', 'Finding',
+    'AnalysisContext', 'AnalysisRule', 'check', 'get_rule', 'register_rule',
+    'registered_rules', 'unregister_rule',
+    'pallas_call_name', 'pallas_call_vmem_bytes', 'pallas_calls',
+    'prim_count', 'walk_eqns',
+]

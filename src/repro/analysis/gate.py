@@ -1,0 +1,76 @@
+"""CI verify gate: ``PYTHONPATH=src python -m repro.analysis.gate``.
+
+Green side: exports every CNN config (resnet8/vgg8/mobilenet, with exit
+heads) on BOTH serving backends — the Pallas path for residency/VMEM/
+launch-count contracts, the jnp path for stage-carry and the HLO traffic
+budget — plus the registry's theoretical pass order, and requires zero
+error-severity findings.
+
+Red side: every registered builtin rule must CATCH its mutation fixture
+(:mod:`repro.analysis.mutations`).  A rule that stops firing — a walker
+regression, a loosened threshold, a skipped requirement — fails CI here
+even though all shipped exports still look clean.
+
+Exit status 0 iff both sides hold.  scripts/ci.sh runs this before the
+test suite.
+"""
+from __future__ import annotations
+
+import sys
+
+
+def _clean_targets():
+    import jax
+    from repro.analysis import check
+    from repro.configs.cnn import (MOBILENET_SMALL_CIFAR, RESNET8_CIFAR,
+                                   VGG8_CIFAR)
+    from repro.core import planner
+    from repro.core.export import export_cnn
+    from repro.core.family import CNNFamily
+    from repro.data import SyntheticImages
+
+    fam = CNNFamily(SyntheticImages())
+    x = jax.random.normal(jax.random.key(1), (4, 32, 32, 3))
+    reports = []
+    for base in (RESNET8_CIFAR, VGG8_CIFAR, MOBILENET_SMALL_CIFAR):
+        params = fam.init(jax.random.key(0), base)
+        params, cfg = fam.add_exits(jax.random.key(2), params, base,
+                                    fam.default_exit_points(base))
+        cfg = cfg.replace(w_bits=8, a_bits=8)
+        for use_pallas in (False, True):
+            model = export_cnn(params, cfg, use_pallas=use_pallas,
+                               calibrate=x)
+            reports.append(check(
+                model, x=x,
+                target=f'{cfg.name}[{model.backend}]'))
+    reports.append(check(sequence=planner.theoretical_order()))
+    return reports
+
+
+def _mutant_reports():
+    from repro.analysis import check
+    from repro.analysis.mutations import MUTANTS
+    return {key: check(**factory()) for key, factory in MUTANTS.items()}
+
+
+def main(argv=None) -> int:
+    ok = True
+    print('== verify: shipped exports must be clean ==')
+    for report in _clean_targets():
+        print(report)
+        if not report.ok:
+            ok = False
+    print('\n== verify: mutated exports must FAIL their rule ==')
+    for key, report in _mutant_reports().items():
+        caught = any(f.severity == 'error' for f in report.by_rule(key))
+        verdict = 'caught' if caught else 'MISSED (rule is dead!)'
+        print(f'{report.target}: {verdict}')
+        if not caught:
+            print(report)
+            ok = False
+    print(f'\nanalysis gate: {"PASS" if ok else "FAIL"}')
+    return 0 if ok else 1
+
+
+if __name__ == '__main__':
+    sys.exit(main())

@@ -1,0 +1,139 @@
+"""Deliberately-broken exports that each analyzer rule must catch.
+
+Every rule ships with a mutation factory proving it is *live*: the factory
+builds a target violating exactly that rule's contract and returns the
+``analysis.check(...)`` kwargs to run it (restricted to the one rule, so
+the red/green verdict is attributable).  tests/test_analysis.py asserts
+red-on-mutant per rule, and ``python -m repro.analysis.gate`` (the
+scripts/ci.sh verify stage) refuses to pass unless every mutant FAILS —
+a rule that silently stops firing breaks CI, not production.
+
+Factories are functions (not precomputed fixtures) because each performs
+a real export; callers invoke only what they need.
+"""
+from __future__ import annotations
+
+from types import SimpleNamespace
+
+import jax
+import jax.numpy as jnp
+
+
+def _resnet_export(*, factorize=False, use_pallas=True, exits=False):
+    from repro.configs.cnn import RESNET8_CIFAR
+    from repro.core.export import export_cnn
+    from repro.core.family import CNNFamily
+    from repro.data import SyntheticImages
+    from repro.models.cnn import init_cnn
+    cfg = RESNET8_CIFAR.replace(w_bits=8, a_bits=8)
+    fam = CNNFamily(SyntheticImages())
+    params = init_cnn(jax.random.key(0), cfg)
+    if factorize:
+        params, _, _ = fam.factorize(params, cfg, energy=0.6, min_rank=2)
+    if exits:
+        params, cfg = fam.add_exits(jax.random.key(2), params, cfg,
+                                    fam.default_exit_points(cfg))
+        cfg = cfg.replace(w_bits=8, a_bits=8)
+    x = jax.random.normal(jax.random.key(1), (2, 16, 16, 3))
+    model = export_cnn(params, cfg, use_pallas=use_pallas, calibrate=x)
+    return model, params, cfg, x
+
+
+def mutant_int8_residency():
+    """A 'resident' export whose graph still runs dynamic abs-max: the
+    dynamic-scale serving fn grafted under a calibrated plan.  The
+    int8-residency rule must flag the reduce_max eqns."""
+    from repro.configs.cnn import RESNET8_CIFAR
+    from repro.core.export import export_cnn
+    from repro.models.cnn import init_cnn
+    cfg = RESNET8_CIFAR.replace(w_bits=8, a_bits=8)
+    params = init_cnn(jax.random.key(0), cfg)
+    x = jax.random.normal(jax.random.key(1), (2, 16, 16, 3))
+    resident = export_cnn(params, cfg, use_pallas=True, calibrate=x)
+    mutant = export_cnn(params, cfg, use_pallas=True)   # dynamic scales
+    mutant.plan = resident.plan            # claims residency it doesn't have
+    return {'model': mutant, 'x': x, 'rules': ('int8-residency',),
+            'target': 'mutant:int8-residency'}
+
+
+def mutant_vmem_fit():
+    """A pallas_call whose blocks + int32 accumulator scratch need ~10 MiB
+    of VMEM per grid step (budget 8 MiB).  quant_matmul itself carries no
+    build-time fit assert — exactly the hole the vmem-fit rule plugs."""
+    from repro.kernels.quant_matmul import quant_matmul
+    n = 1024           # bm=bn=bk=n: 2x1 MiB int8 blocks + 4 MiB fp32 out
+    w_q = jnp.zeros((n, n), jnp.int8)      # + 4 MiB int32 acc scratch
+    sw = jnp.ones((n,), jnp.float32)
+
+    def fn(p, v):
+        del p
+        return quant_matmul(v, w_q, jnp.ones((n,), jnp.float32), sw,
+                            bm=n, bn=n, bk=n, interpret=True)
+
+    model = SimpleNamespace(fn=fn, fn_exits=None, params=None, plan=None,
+                            backend='pallas', cfg=None, stage_fns=None)
+    return {'model': model, 'x': jnp.zeros((n, n), jnp.int8),
+            'rules': ('vmem-fit',), 'target': 'mutant:vmem-fit'}
+
+
+def mutant_launch_budget():
+    """A factored resident export whose plan claims two launches for a
+    layer the graph serves fused (one pallas_call) — the classic drift
+    between the launch accounting and the compiled graph."""
+    model, _, _, x = _resnet_export(factorize=True, use_pallas=True)
+    fused = [e for e in model.plan.layers.values()
+             if e.get('fused') and e['kind'] == 'conv']
+    assert fused, 'mutation needs at least one fused low-rank layer'
+    fused[0]['launches'] = 2               # graph still launches once
+    return {'model': model, 'x': x, 'rules': ('launch-budget',),
+            'target': 'mutant:launch-budget'}
+
+
+def mutant_stage_carry():
+    """A stage-split export whose first segment dequantizes its carry to
+    fp32 before handing it across the stage boundary — 4x the inter-stage
+    HBM bytes and a broken scheduler contract."""
+    model, _, _, x = _resnet_export(use_pallas=False, exits=True)
+    orig = model.stage_fns[0]
+
+    def leaky(p, h):
+        exits, carry = orig(p, h)
+        return exits, carry.q.astype(jnp.float32) * carry.scale
+
+    model.stage_fns = (jax.jit(leaky),) + model.stage_fns[1:]
+    return {'model': model, 'x': x, 'rules': ('stage-carry',),
+            'target': 'mutant:stage-carry'}
+
+
+def mutant_order_dag():
+    """Quantization before pruning: 'QP' reverses the theoretical edge
+    P→Q (neuron granularity precedes sub-neuron)."""
+    return {'sequence': 'QP', 'rules': ('order-dag',),
+            'target': 'mutant:order-dag'}
+
+
+def mutant_hlo_traffic():
+    """A serving fn that silently runs the network twice (averaged over
+    the input and its mirror — flip defeats CSE) under an unchanged plan:
+    ~2x the predicted HBM bytes, well past the 20% budget."""
+    model, _, _, x = _resnet_export(use_pallas=False)
+    orig = model.fn
+
+    def doubled(p, v):
+        return 0.5 * (orig(p, v) + orig(p, jnp.flip(v, axis=1)))
+
+    model.fn = jax.jit(doubled)
+    return {'model': model, 'x': x, 'rules': ('hlo-traffic',),
+            'target': 'mutant:hlo-traffic'}
+
+
+#: rule key -> factory returning analysis.check(**kwargs) for a target
+#: that MUST produce an error finding from exactly that rule.
+MUTANTS = {
+    'int8-residency': mutant_int8_residency,
+    'vmem-fit': mutant_vmem_fit,
+    'launch-budget': mutant_launch_budget,
+    'stage-carry': mutant_stage_carry,
+    'order-dag': mutant_order_dag,
+    'hlo-traffic': mutant_hlo_traffic,
+}

@@ -1,0 +1,561 @@
+"""The rule-registry static analyzer: graph contracts checked at export.
+
+Mirrors the core/registry.py idiom — rules are registrable data
+(:class:`AnalysisRule`: key + severity + requirements + check fn), a
+process-global registry (:func:`register_rule` / :func:`unregister_rule` /
+:func:`get_rule` / :func:`registered_rules`), and one entry point
+(:func:`check`) that runs every applicable rule over a target and returns
+a structured :class:`~repro.analysis.report.AnalysisReport`.  Nothing is
+*executed*: rules trace jaxprs, walk eqns, read plan metadata, and (for
+hlo-traffic) inspect the optimized HLO text.
+
+Builtin rules (see README.md in this package):
+
+=================  ========  ====================================kind=======
+int8-residency     error     fp32 only at logits / declared fallbacks; zero
+                             reduce_max and zero weight-scale recompute in a
+                             calibrated resident graph
+vmem-fit           error     every pallas_call's blocks + scratch statically
+                             fit ``tiling.VMEM_BUDGET`` per grid step
+launch-budget      error     pallas_call count == the layer plan's launch
+                             accounting, incl. fused/chained selections
+stage-carry        error     stage boundaries exchange int8 QAct with static
+                             float scales; no host transfers between segments
+order-dag          error     a Pipeline sequence respects every theoretical
+                             order edge (``planner.theoretical_dag``)
+hlo-traffic        error     optimized-HLO buffer bytes within 20% of the
+                             roofline-shared prediction (jnp backend)
+=================  ========  =============================================
+
+A rule whose requirements the target cannot satisfy (e.g. order-dag with
+no sequence, vmem-fit on the jnp backend) is *skipped* and recorded
+as such in the report — skipping is visible, never silent.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.analysis.report import (SEVERITIES, AnalysisReport, Finding)
+from repro.analysis.walker import (pallas_call_name, pallas_call_vmem_bytes,
+                                   pallas_calls, prim_count, walk_eqns)
+
+#: What a rule may declare in ``requires`` — :meth:`AnalysisContext.has`
+#: answers each against the target.
+KNOWN_REQUIRES = ('model', 'plan', 'pallas', 'stages', 'sequence', 'input')
+
+#: hlo-traffic: measured bytes may exceed the prediction by this fraction
+#: before the rule errors (the ISSUE's ">20% regression" threshold).
+HLO_TRAFFIC_TOL = 0.20
+
+_KEY_RE = re.compile(r'^[a-z0-9]+(-[a-z0-9]+)*$')
+
+# primitives that bounce through the host mid-segment — a serving segment
+# crossing one of these breaks the scheduler's on-device carry contract.
+# NB: device_put is deliberately absent: inside a jitted graph it is a
+# placement/sharding annotation on constants, not a host round-trip.
+_TRANSFER_PRIMS = ('copy_to_host_async', 'io_callback', 'pure_callback',
+                   'python_callback')
+
+
+@dataclass(frozen=True)
+class AnalysisRule:
+    """A registrable graph contract: metadata + the check itself."""
+    key: str             # kebab-case, e.g. 'int8-residency'
+    severity: str        # default severity of this rule's findings
+    requires: tuple      # subset of KNOWN_REQUIRES the target must satisfy
+    doc: str             # one-line contract statement (shown in README/CLI)
+    fn: Callable         # (ctx: AnalysisContext, rule) -> iterable[Finding]
+
+    def finding(self, message: str, *, where: str | None = None,
+                severity: str | None = None) -> Finding:
+        """Build a finding attributed to this rule (default severity)."""
+        return Finding(self.key, severity or self.severity, message, where)
+
+
+# ----------------------------------------------------------------- registry
+
+
+_RULES: dict[str, AnalysisRule] = {}
+
+
+def register_rule(rule: AnalysisRule, *, replace: bool = False
+                  ) -> AnalysisRule:
+    """Register a rule under its key.  Raises on collisions unless
+    ``replace=True`` (a third-party rule must not shadow silently)."""
+    if not _KEY_RE.match(rule.key or ''):
+        raise ValueError(f'rule key must be kebab-case '
+                         f'([a-z0-9-]), got {rule.key!r}')
+    if rule.severity not in SEVERITIES:
+        raise ValueError(f'rule {rule.key!r}: unknown severity '
+                         f'{rule.severity!r} (one of {SEVERITIES})')
+    unknown = sorted(set(rule.requires) - set(KNOWN_REQUIRES))
+    if unknown:
+        raise ValueError(f'rule {rule.key!r}: unknown requirements '
+                         f'{unknown} (known: {KNOWN_REQUIRES})')
+    if not callable(rule.fn):
+        raise ValueError(f'rule {rule.key!r}: fn must be callable')
+    if rule.key in _RULES and not replace:
+        raise ValueError(f'rule key {rule.key!r} already registered; '
+                         f'use replace=True')
+    _RULES[rule.key] = rule
+    return rule
+
+
+def unregister_rule(key: str) -> AnalysisRule:
+    """Remove and return a registered rule (tests round-trip through it)."""
+    try:
+        return _RULES.pop(key)
+    except KeyError:
+        raise KeyError(f'rule {key!r} is not registered '
+                       f'(have {registered_rules()})') from None
+
+
+def get_rule(key: str) -> AnalysisRule:
+    try:
+        return _RULES[key]
+    except KeyError:
+        raise KeyError(f'unknown rule {key!r} '
+                       f'(registered: {registered_rules()})') from None
+
+
+def registered_rules() -> tuple:
+    """All registered rule keys, sorted alphabetically."""
+    return tuple(sorted(_RULES))
+
+
+# ------------------------------------------------------------------ context
+
+
+class AnalysisContext:
+    """Lazy, cached views of the analysis target.
+
+    Jaxpr traces, the weight-scale-recompute delta, and the optimized HLO
+    text are each produced at most once no matter how many rules read them
+    — tracing a resident export is cheap (~100ms) but not free, and the
+    HLO compile is the expensive one (~1s on the CPU backend).
+    """
+
+    def __init__(self, model=None, sequence=None, x=None):
+        self.model = model
+        self.sequence = sequence
+        self._x = x
+        self._jaxprs: dict[str, Any] = {}
+        self._scale_delta: int | None = None
+        self._hlo: str | None = None
+
+    # -- capability probes (rule `requires`) --
+
+    def has(self, req: str) -> bool:
+        if req == 'model':
+            return self.model is not None
+        if req == 'plan':
+            return getattr(self.model, 'plan', None) is not None
+        if req == 'pallas':
+            return getattr(self.model, 'backend', None) == 'pallas'
+        if req == 'stages':
+            return bool(getattr(self.model, 'stage_fns', None))
+        if req == 'sequence':
+            return self.sequence is not None
+        if req == 'input':
+            return self.example_input() is not None
+        raise ValueError(f'unknown requirement {req!r} '
+                         f'(known: {KNOWN_REQUIRES})')
+
+    def missing(self, rule: AnalysisRule) -> list:
+        return [r for r in rule.requires if not self.has(r)]
+
+    # -- target views --
+
+    def example_input(self):
+        """The abstract serving input: caller-provided, else derived from
+        the resident plan's first layer (its recorded calibration
+        geometry)."""
+        if self._x is None and getattr(self.model, 'plan', None) is not None:
+            first = next(iter(self.model.plan.layers.values()))
+            self._x = jnp.zeros(first['in_shape'], jnp.float32)
+        return self._x
+
+    def sequence_str(self) -> str:
+        """The pass-key string of the target sequence (accepts a raw
+        string or anything with a ``.sequence`` — e.g. chain.Pipeline)."""
+        return getattr(self.sequence, 'sequence', self.sequence)
+
+    def _trace(self, which: str):
+        if which not in self._jaxprs:
+            from repro.core import quantization
+            m = self.model
+            fn = m.fn if which == 'fn' else m.fn_exits
+            before = quantization.WEIGHT_SCALE_COMPUTATIONS[0]
+            jx = jax.make_jaxpr(lambda p, v: fn(p, v))(
+                m.params, self.example_input())
+            delta = quantization.WEIGHT_SCALE_COMPUTATIONS[0] - before
+            if self._scale_delta is None:
+                self._scale_delta = delta
+            self._jaxprs[which] = jx.jaxpr
+        return self._jaxprs[which]
+
+    def jaxpr_fn(self):
+        return self._trace('fn')
+
+    def jaxpr_exits(self):
+        return self._trace('exits')
+
+    def main_jaxpr(self):
+        """(jaxpr, label) of the widest serving graph — ``fn_exits`` when
+        exported, else ``fn`` — so checks cover the exit heads too."""
+        if getattr(self.model, 'fn_exits', None) is not None:
+            return self.jaxpr_exits(), 'fn_exits'
+        return self.jaxpr_fn(), 'fn'
+
+    def n_heads(self) -> int:
+        """fp32 logit heads the main jaxpr legitimately emits."""
+        if getattr(self.model, 'fn_exits', None) is None:
+            return 1
+        cfg = getattr(self.model, 'cfg', None)
+        return 1 + len(tuple(getattr(cfg, 'exit_stages', ()) or ()))
+
+    def scale_delta(self) -> int:
+        """Weight-scale recomputations observed while tracing the serving
+        fn (quantization.WEIGHT_SCALE_COMPUTATIONS delta; must be 0)."""
+        if self._scale_delta is None:
+            self.main_jaxpr()
+        return self._scale_delta
+
+    def hlo_text(self) -> str:
+        if self._hlo is None:
+            m = self.model
+            self._hlo = jax.jit(lambda p, v: m.fn(p, v)).lower(
+                m.params, self.example_input()).compile().as_text()
+        return self._hlo
+
+
+# -------------------------------------------------------------- entry point
+
+
+def check(model=None, *, sequence=None, x=None, rules=None,
+          strict: bool = False, target: str = '') -> AnalysisReport:
+    """Run every applicable registered rule over the target.
+
+    ``model`` — a ServingModel (or anything shaped like one);
+    ``sequence`` — a pass-key string or Pipeline for the order-dag rule;
+    ``x`` — example input override (derived from the plan when omitted);
+    ``rules`` — restrict to these keys (default: all registered);
+    ``strict`` — raise :class:`AnalysisError` on any error finding.
+
+    Rules whose requirements the target cannot satisfy are recorded under
+    ``report.skipped`` with the unmet requirement — not silently dropped.
+    """
+    ctx = AnalysisContext(model=model, sequence=sequence, x=x)
+    keys = tuple(rules) if rules is not None else registered_rules()
+    findings, checked, skipped = [], [], []
+    for key in keys:
+        rule = get_rule(key)
+        missing = ctx.missing(rule)
+        if missing:
+            skipped.append((key, f'target lacks {"/".join(missing)}'))
+            continue
+        findings.extend(rule.fn(ctx, rule))
+        checked.append(key)
+    if not target:
+        cfg = getattr(model, 'cfg', None)
+        target = getattr(cfg, 'name', None) or \
+            (f'sequence {ctx.sequence_str()!r}' if sequence is not None
+             else 'model')
+    report = AnalysisReport(findings=tuple(findings), checked=tuple(checked),
+                            skipped=tuple(skipped), target=target)
+    if strict:
+        report.raise_if_errors()
+    return report
+
+
+# ------------------------------------------------------------ builtin rules
+
+
+def _rule_int8_residency(ctx: AnalysisContext, rule: AnalysisRule):
+    """fp32 appears only at logit heads / declared fallbacks; no dynamic
+    activation abs-max (reduce_max) and no weight-scale recompute survive
+    in a calibrated resident graph."""
+    out = []
+    jaxpr, label = ctx.main_jaxpr()
+    n_rm = prim_count(jaxpr, 'reduce_max')
+    if n_rm:
+        out.append(rule.finding(
+            f'{n_rm} reduce_max eqn(s) in the calibrated resident graph — '
+            f'an activation abs-max runs at serve time (activation scales '
+            f'must be static calibration constants)', where=label))
+    if ctx.scale_delta():
+        out.append(rule.finding(
+            f'{ctx.scale_delta()} weight-scale recomputation(s) while '
+            f'tracing the serving fn — weight scales must be snapshotted '
+            f'at export, not derived per call', where=label))
+    model = ctx.model
+    from repro.kernels.depthwise_conv import fits_depthwise
+    for name, e in model.plan.layers.items():
+        if e.get('fallback') and e.get('w_shape') is not None \
+                and fits_depthwise(e['w_shape']):
+            out.append(rule.finding(
+                f'layer declares an fp32 grouped-conv fallback but its '
+                f'weight {e["w_shape"]} fits the int8 depthwise kernel — '
+                f'resident routing regressed (fallback is reserved for '
+                f'per-group depth > 1)', where=name))
+    if getattr(model, 'backend', None) != 'pallas':
+        # jnp (CPU) backend: convs legitimately carry fp32 inside a layer
+        # (no int8 conv units); the static-scale checks above are the
+        # whole residency contract here
+        return out
+    calls = pallas_calls(jaxpr)
+    if not calls:
+        out.append(rule.finding(
+            'pallas-backend export contains zero pallas_call eqns — the '
+            'resident path is not routing through the kernels',
+            where=label))
+        return out
+    for e in calls:
+        dt = e.invars[0].aval.dtype
+        if dt != jnp.int8:
+            out.append(rule.finding(
+                f'kernel {pallas_call_name(e)} consumes {dt} activations '
+                f'(int8 expected at every kernel boundary)',
+                where=pallas_call_name(e)))
+    out_dtypes = [v.aval.dtype for e in calls for v in e.outvars]
+    bad = sorted({str(d) for d in out_dtypes
+                  if d not in (jnp.int8, jnp.float32)})
+    if bad:
+        out.append(rule.finding(
+            f'kernel outputs of dtype {bad} — only int8 boundaries and '
+            f'fp32 logits are allowed', where=label))
+    n_fp32 = sum(1 for d in out_dtypes if d == jnp.float32)
+    n_heads = ctx.n_heads()
+    if n_fp32 > n_heads:
+        out.append(rule.finding(
+            f'{n_fp32} fp32 kernel outputs but only {n_heads} logit '
+            f'head(s) — an inter-layer boundary leaks fp32 into HBM',
+            where=label))
+    allowed_convs = sum(1 for e in model.plan.layers.values()
+                        if e.get('fallback'))
+    n_fp32_convs = sum(
+        1 for e in walk_eqns(jaxpr)
+        if e.primitive.name == 'conv_general_dilated'
+        and e.outvars[0].aval.dtype == jnp.float32)
+    if n_fp32_convs > allowed_convs:
+        out.append(rule.finding(
+            f'{n_fp32_convs} fp32 conv eqn(s) vs {allowed_convs} declared '
+            f'fallback layer(s) — an undeclared conv dodged the int8 '
+            f'kernels', where=label))
+    return out
+
+
+def _rule_vmem_fit(ctx: AnalysisContext, rule: AnalysisRule):
+    """Every pallas_call's block specs + scratch statically fit the VMEM
+    budget — Mosaic OOM caught at export, not at first launch."""
+    from repro.kernels.tiling import VMEM_BUDGET
+    out = []
+    jaxpr, label = ctx.main_jaxpr()
+    for e in pallas_calls(jaxpr):
+        b = pallas_call_vmem_bytes(e)
+        if b > VMEM_BUDGET:
+            out.append(rule.finding(
+                f'kernel {pallas_call_name(e)} holds {b / 2**20:.1f} MiB '
+                f'in VMEM per grid step (blocks + scratch), budget '
+                f'{VMEM_BUDGET / 2**20:.0f} MiB — Mosaic would OOM this '
+                f'launch', where=pallas_call_name(e)))
+    return out
+
+
+def _rule_launch_budget(ctx: AnalysisContext, rule: AnalysisRule):
+    """pallas_call counts in the compiled graphs match the layer plan's
+    launch accounting, and each factored layer's recorded launches agree
+    with its fused/chained selection."""
+    out = []
+    model = ctx.model
+    s = model.plan.summary()
+    for name, e in model.plan.layers.items():
+        if not (e.get('factored') and e['kind'] == 'conv'):
+            continue
+        want = 1 if e.get('fused') else 2
+        if e.get('launches') != want:
+            out.append(rule.finding(
+                f'plan records {e.get("launches")} launch(es) for a '
+                f'{"fused" if e.get("fused") else "chained"} factored '
+                f'layer (expected {want})', where=name))
+        sel = e.get('selection') or {}
+        choice = sel.get('choice')
+        if choice and (choice == 'fused') != bool(e.get('fused')):
+            out.append(rule.finding(
+                f'plan serves the layer {"fused" if e.get("fused") else "chained"} '
+                f'but its recorded selection chose {choice!r} — the '
+                f'shipped lowering contradicts the cost decision',
+                where=name))
+        if 'fused_us' in sel and 'chained_us' in sel:
+            want = ('fused' if sel['fused_us'] <= sel['chained_us']
+                    else 'chained')
+            if choice != want:
+                out.append(rule.finding(
+                    f'selection chose {choice!r} but its own costs say '
+                    f'{want!r} (fused {sel["fused_us"]:.1f}us vs chained '
+                    f'{sel["chained_us"]:.1f}us) — the cost model and the '
+                    f'decision disagree', where=name))
+    if getattr(model, 'backend', None) != 'pallas':
+        # jnp backend has no pallas_call eqns to count; the plan-internal
+        # launch/selection consistency above is still enforced
+        return out
+    got = prim_count(ctx.jaxpr_fn(), 'pallas_call')
+    if got != s['kernel_launches']:
+        out.append(rule.finding(
+            f'{got} pallas_call eqn(s) in fn vs {s["kernel_launches"]} '
+            f'planned kernel launches', where='fn'))
+    if getattr(model, 'fn_exits', None) is not None:
+        got_ex = prim_count(ctx.jaxpr_exits(), 'pallas_call')
+        want_ex = s['kernel_launches'] + s['exit_head_launches']
+        if got_ex != want_ex:
+            out.append(rule.finding(
+                f'{got_ex} pallas_call eqn(s) in fn_exits vs {want_ex} '
+                f'planned (main + exit heads)', where='fn_exits'))
+    return out
+
+
+def _rule_stage_carry(ctx: AnalysisContext, rule: AnalysisRule):
+    """Every stage boundary exchanges an int8 QAct with a static float
+    scale, and no segment crosses a host-transfer primitive — the
+    continuous-batching scheduler's carry contract."""
+    from repro.core.export import QAct
+    out = []
+    model = ctx.model
+    carry = ctx.example_input()
+    n = len(model.stage_fns)
+    for i, fn in enumerate(model.stage_fns):
+        jx = jax.make_jaxpr(lambda p, h, _f=fn: _f(p, h))(model.params,
+                                                          carry)
+        hosts = sorted({e.primitive.name for e in walk_eqns(jx.jaxpr)
+                        if e.primitive.name in _TRANSFER_PRIMS
+                        or 'callback' in e.primitive.name})
+        if hosts:
+            out.append(rule.finding(
+                f'segment {i} crosses host-transfer primitive(s) {hosts} '
+                f'— stage carries must stay on device', where=f'stage{i}'))
+        res = jax.eval_shape(fn, model.params, carry)
+        if i == n - 1:
+            break
+        _, carry = res
+        if not isinstance(carry, QAct):
+            leaves = jax.tree_util.tree_leaves(carry)
+            dts = sorted({str(v.dtype) for v in leaves})
+            out.append(rule.finding(
+                f'segment {i} carries {type(carry).__name__} of dtype '
+                f'{dts} across the stage boundary — must be an int8 QAct '
+                f'(fp32 carries quadruple inter-stage HBM traffic and '
+                f'break the scheduler contract)', where=f'stage{i}'))
+        else:
+            if carry.q.dtype != jnp.int8:
+                out.append(rule.finding(
+                    f'segment {i} QAct carry holds {carry.q.dtype} codes '
+                    f'(int8 expected)', where=f'stage{i}'))
+            if not isinstance(carry.scale, float):
+                out.append(rule.finding(
+                    f'segment {i} QAct scale is {type(carry.scale).__name__}'
+                    f' — scales must be static Python floats baked at '
+                    f'calibration, not traced values', where=f'stage{i}'))
+    return out
+
+
+def _rule_order_dag(ctx: AnalysisContext, rule: AnalysisRule):
+    """A pass sequence respects every edge of the theoretical order DAG
+    (static before dynamic, large before small granularity) — the paper's
+    contribution, linted before any training happens."""
+    from repro.core import planner, registry
+    seq = ctx.sequence_str()
+    out = []
+    known = [k for k in seq if k in registry.registered_keys()]
+    for k in sorted(set(seq) - set(known)):
+        out.append(rule.finding(
+            f'pass key {k!r} is not registered — the order DAG cannot '
+            f'cover it', where=k, severity='warn'))
+    for a, b in planner.theoretical_dag(''.join(known)):
+        # edge (a, b): every a must run before any b; with repeats allowed
+        # a b occurring before the LAST a is still a violation
+        if seq.index(b) < seq.rindex(a):
+            pa, pb = registry.get_pass(a), registry.get_pass(b)
+            out.append(rule.finding(
+                f"sequence {seq!r} runs '{b}' before '{a}', violating the "
+                f"theoretical edge {a}→{b} ({pa.name} is "
+                f"{pa.kind}/{pa.granularity}, {pb.name} is "
+                f"{pb.kind}/{pb.granularity}: static precedes dynamic, "
+                f"large granularity precedes small)",
+                where=f'{a}->{b}'))
+    return out
+
+
+def _rule_hlo_traffic(ctx: AnalysisContext, rule: AnalysisRule):
+    """Optimized-HLO buffer bytes (launch/hlo_analysis.py proxy) stay
+    within HLO_TRAFFIC_TOL of the roofline-shared per-layer prediction
+    (analysis/traffic.py) — a silent activation-traffic regression fails
+    the export."""
+    from repro.analysis import traffic
+    from repro.launch import hlo_analysis
+    model = ctx.model
+    if getattr(model, 'backend', None) != 'jnp':
+        return [rule.finding(
+            'interpret-mode Pallas HLO is not representative of device '
+            'HBM traffic (kernel bodies inline as giant fp32 loops); '
+            'traffic is budgeted on the jnp export of the same plan',
+            where='hlo', severity='info')]
+    measured = hlo_analysis.analyze(ctx.hlo_text())['bytes']
+    main = {n: e for n, e in model.plan.layers.items()
+            if not n.startswith('exit')}
+    pred = traffic.predicted_hbm_bytes(main, backend='jnp')
+    predicted = pred['predicted_bytes']
+    ratio = measured / max(predicted, 1.0)
+    out = [rule.finding(
+        f'HLO buffer proxy {measured / 1e6:.2f} MB vs predicted '
+        f'{predicted / 1e6:.2f} MB ({ratio:.2f}x)', where='hlo',
+        severity='info')]
+    if measured > predicted * (1.0 + HLO_TRAFFIC_TOL):
+        top = sorted(pred['terms'].items(), key=lambda kv: -kv[1])[:3]
+        out.append(rule.finding(
+            f'HLO buffer bytes {measured / 1e6:.2f} MB exceed the '
+            f'predicted {predicted / 1e6:.2f} MB by more than '
+            f'{HLO_TRAFFIC_TOL:.0%} ({ratio:.2f}x) — an HBM-traffic '
+            f'regression shipped (largest predicted terms: '
+            + ', '.join(f'{k}={v / 1e6:.2f}MB' for k, v in top) + ')',
+            where='hlo'))
+    return out
+
+
+def _register_builtin_rules():
+    for key, requires, doc, fn in (
+        ('int8-residency', ('model', 'plan', 'input'),
+         'fp32 only at logit heads / declared fallbacks; zero reduce_max '
+         'and zero weight-scale recompute in calibrated resident graphs',
+         _rule_int8_residency),
+        ('vmem-fit', ('model', 'pallas', 'input'),
+         "every pallas_call's block specs + scratch statically fit "
+         'tiling.VMEM_BUDGET per grid step',
+         _rule_vmem_fit),
+        ('launch-budget', ('model', 'plan', 'input'),
+         "pallas_call counts match the layer plan's launch accounting, "
+         'incl. fused/chained low-rank selections (graph counting on the '
+         'pallas backend; plan-internal consistency on any backend)',
+         _rule_launch_budget),
+        ('stage-carry', ('model', 'plan', 'stages', 'input'),
+         'stage boundaries exchange int8 QAct with static float scales; '
+         'no host transfers between serving segments',
+         _rule_stage_carry),
+        ('order-dag', ('sequence',),
+         "a Pipeline sequence respects planner.theoretical_dag's edges "
+         '(reports the violated edge)',
+         _rule_order_dag),
+        ('hlo-traffic', ('model', 'plan', 'input'),
+         'optimized-HLO buffer bytes within 20% of the roofline-shared '
+         'per-layer prediction (jnp backend)',
+         _rule_hlo_traffic),
+    ):
+        register_rule(AnalysisRule(key=key, severity='error',
+                                   requires=requires, doc=doc, fn=fn))
+
+
+_register_builtin_rules()

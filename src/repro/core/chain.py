@@ -39,13 +39,20 @@ class Pipeline:
 
     @classmethod
     def from_sequence(cls, sequence: str, hps: dict | None = None, *,
-                      allow_repeats: bool = False) -> 'Pipeline':
+                      allow_repeats: bool = False,
+                      verify_order: bool = False) -> 'Pipeline':
         """Build from a key string like 'DPLQE' and optional per-key hps.
 
         ``hps`` maps pass key -> dict or typed hp dataclass.  Raises on
         unknown pass keys, on hps entries for keys not in the sequence
         (typo guard), and on duplicate keys unless ``allow_repeats=True``
         (the repeat-compression experiments opt in deliberately).
+
+        ``verify_order=True`` additionally lints the sequence against the
+        theoretical order DAG via the analyzer's order-dag rule and raises
+        :class:`~repro.analysis.report.AnalysisError` naming the violated
+        edge.  Opt-in: running a deliberately wrong order (the pairwise
+        experiments, ablations) is a feature, not a bug.
         """
         hps = dict(hps or {})
         seq = list(sequence)
@@ -63,7 +70,18 @@ class Pipeline:
                 f'(registered passes: {registry.registered_keys()})')
         steps = tuple((p, p.resolve_hp(hps.get(k)))
                       for k in seq for p in (registry.get_pass(k),))
-        return cls(steps)
+        pipe = cls(steps)
+        if verify_order:
+            pipe.verify_order(strict=True)
+        return pipe
+
+    def verify_order(self, *, strict: bool = False):
+        """Lint this pipeline's sequence against the theoretical order DAG
+        (the analyzer's order-dag rule) and return the AnalysisReport;
+        ``strict=True`` raises AnalysisError on a violated edge."""
+        from repro.analysis import check
+        return check(sequence=self, rules=('order-dag',), strict=strict,
+                     target=f'Pipeline {self.sequence!r}')
 
     @classmethod
     def auto(cls, planner, hps: dict | None = None) -> 'Pipeline':

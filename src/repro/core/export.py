@@ -219,7 +219,9 @@ def _compile_layer_plan(params, cfg, x, a_qmax, fuse_lowrank=True,
         e = {'sx': amax(cx) / a_qmax, 'kind': 'conv',
              'fallback': groups > 1 and not depthwise,
              'depthwise': depthwise, 'factored': 'u' in p, 'fused': False,
-             'stride': stride, 'in_shape': tuple(cx.shape)}
+             'stride': stride, 'in_shape': tuple(cx.shape),
+             'groups': groups,
+             'w_shape': None if 'u' in p else tuple(p['w'].shape)}
         if 'u' in p:
             mid = cnn_lib.conv(p['u'], cx, stride=stride, quant=quant,
                                groups=groups)
@@ -622,6 +624,8 @@ class ServingModel:
     exit_threshold: float = 0.9        # E's operating point (export_chain)
     stage_fns: tuple | None = None     # layer plan split at exit boundaries
     stage_exits: tuple = ()            # exit stage each segment ends at
+    backend: str = 'jnp'               # 'pallas' | 'jnp' serving lowering
+    analysis: Any = None               # AnalysisReport from export verify=
 
     def serve(self, x):
         return self.fn(self.params, x)
@@ -663,8 +667,15 @@ class ServingModel:
         return self.run_stage(self.n_stages - 1, h), exits
 
     def summary(self) -> dict | None:
-        """The layer plan's deployed-cost summary (int8-resident exports)."""
-        return self.plan.summary() if self.plan is not None else None
+        """The layer plan's deployed-cost summary (int8-resident exports).
+        Exports built with ``verify=`` carry their structured
+        ``AnalysisReport`` under the ``analysis`` key."""
+        if self.plan is None:
+            return None
+        s = self.plan.summary()
+        if self.analysis is not None:
+            s['analysis'] = self.analysis.to_dict()
+        return s
 
 
 def calibrate_exit_threshold(model: ServingModel, x, quantile=0.5):
@@ -685,7 +696,8 @@ def calibrate_exit_threshold(model: ServingModel, x, quantile=0.5):
 
 
 def export_cnn(params, cfg, *, use_pallas=None, calibrate=None,
-               fuse_lowrank=True, select_kernels='model') -> ServingModel:
+               fuse_lowrank=True, select_kernels='model',
+               verify=None) -> ServingModel:
     """Compile a (possibly chain-compressed) CNN to the int8 serving path.
 
     ``calibrate`` (a sample input batch) selects the int8-resident plan:
@@ -697,7 +709,17 @@ def export_cnn(params, cfg, *, use_pallas=None, calibrate=None,
     chained, the benchmark A/B).  ``calibrate=None`` keeps the
     dynamic-scale path (one abs-max per layer per call, fp32 activations
     between layers).
+
+    ``verify`` runs the static analyzer (repro/analysis) over the export:
+    ``'strict'`` raises :class:`~repro.analysis.AnalysisError` on any
+    error-severity finding, ``'warn'`` only records them.  Either way the
+    structured ``AnalysisReport`` lands on ``model.analysis`` and in
+    ``model.summary()['analysis']``.  ``None`` (default) skips analysis —
+    exports on hot paths (per-test, per-benchmark-variant) stay cheap.
     """
+    if verify not in (None, 'strict', 'warn'):
+        raise ValueError(f"verify must be None, 'strict' or 'warn', "
+                         f'got {verify!r}')
     if use_pallas is None:
         use_pallas = jax.default_backend() == 'tpu'   # kernels are Mosaic-only
     w_bits, a_bits = _serving_bits(cfg)
@@ -729,10 +751,16 @@ def export_cnn(params, cfg, *, use_pallas=None, calibrate=None,
     stage_fns, stage_exits = (None, ())
     if cfg.exit_stages:
         stage_fns, stage_exits = _make_stage_fns(cfg, kw)
-    return ServingModel(cfg=cfg, params=qparams, fn=fn,
-                        fn_exits=fn_exits if cfg.exit_stages else None,
-                        plan=plan, stage_fns=stage_fns,
-                        stage_exits=stage_exits)
+    model = ServingModel(cfg=cfg, params=qparams, fn=fn,
+                         fn_exits=fn_exits if cfg.exit_stages else None,
+                         plan=plan, stage_fns=stage_fns,
+                         stage_exits=stage_exits,
+                         backend='pallas' if use_pallas else 'jnp')
+    if verify is not None:
+        from repro.analysis import check     # lazy: analysis imports core
+        model.analysis = check(model, x=calibrate,
+                               strict=(verify == 'strict'))
+    return model
 
 
 def export_lm(params, cfg) -> ServingModel:

@@ -39,6 +39,29 @@ def theoretical_order(keys=None) -> str:
     return ''.join(sorted(keys, key=pass_rank))
 
 
+def theoretical_dag(keys=None) -> tuple:
+    """The theory's order edges over ``keys`` (default: all registered).
+
+    Returns ``((first, later), ...)`` — one edge per pass pair in
+    *distinct* (kind, granularity) classes, ordered static→dynamic and
+    large→small granularity.  Same-class pairs (e.g. 'L' and 'Q', both
+    static/sub-neuron) get NO edge: their key tiebreak is a determinism
+    convention, not a theorem, so a checker must not flag either order.
+    The order-dag analyzer rule (repro/analysis) lints Pipeline sequences
+    against exactly these edges, reporting the violated one.
+    """
+    if keys is None:
+        keys = registry.registered_keys()
+    edges = []
+    for a, b in itertools.combinations(sorted(set(keys)), 2):
+        ra, rb = pass_rank(a)[:2], pass_rank(b)[:2]
+        if ra < rb:
+            edges.append((a, b))
+        elif rb < ra:
+            edges.append((b, a))
+    return tuple(edges)
+
+
 # ------------------------------------------------------------ frontier logic
 
 

@@ -94,6 +94,12 @@ def main():
     ap.add_argument('--resident', action='store_true',
                     help='int8-resident plan: calibrate static activation '
                          'scales on the first eval batch (core/export.py)')
+    ap.add_argument('--verify', nargs='?', const='strict', default=None,
+                    choices=('strict', 'warn'),
+                    help='run the static analyzer (repro/analysis) over '
+                         'the export before serving and print the report; '
+                         'strict (default) aborts on any error finding. '
+                         'Implies --resident (rules read the layer plan).')
     ap.add_argument('--server', action='store_true',
                     help='request-level serving: Poisson arrivals through '
                          'the continuous-batching scheduler '
@@ -109,7 +115,7 @@ def main():
                     help='--server: run a partial batch once its oldest '
                          'request has waited this long (seconds)')
     args = ap.parse_args()
-    if args.server:
+    if args.server or args.verify:
         args.resident = True
 
     fam = CNNFamily(SyntheticImages())
@@ -124,7 +130,12 @@ def main():
 
     stream = fam.eval_batches(args.batches, args.batch)
     model = export_cnn(params, cfg, use_pallas=True if args.pallas else None,
-                       calibrate=stream[0][0] if args.resident else None)
+                       calibrate=stream[0][0] if args.resident else None,
+                       verify=args.verify)
+    if args.verify:
+        # strict mode raised inside export_cnn already; print the report
+        # (incl. info findings and visible skips) either way
+        print(model.analysis)
     if args.resident:
         s = model.summary()
         print(f'layer plan: {s["kernel_launches"]} kernel launches, '

@@ -1,0 +1,204 @@
+"""Static-analyzer tests: the rule registry round-trips like the pass
+registry, every builtin rule is green on a clean resident export, RED on
+its own deliberately-mutated export (repro/analysis/mutations.py — the
+same fixtures the ci.sh gate runs), order-dag names the violated edge,
+and reports serialize/attach/raise the way export_cnn and the serving
+launcher rely on."""
+import json
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.analysis import (AnalysisError, AnalysisReport, AnalysisRule,
+                            Finding, check, get_rule, register_rule,
+                            registered_rules, unregister_rule)
+from repro.analysis.mutations import MUTANTS, _resnet_export
+from repro.core import planner, registry
+
+
+# ------------------------------------------------------------ rule registry
+
+
+def test_rule_registry_round_trip():
+    rule = AnalysisRule(key='always-green', severity='info', requires=(),
+                        doc='fires nothing', fn=lambda ctx, r: [])
+    register_rule(rule)
+    try:
+        assert get_rule('always-green') is rule
+        assert 'always-green' in registered_rules()
+        with pytest.raises(ValueError, match='already registered'):
+            register_rule(rule)
+        register_rule(rule, replace=True)          # explicit shadowing ok
+        # an unconstrained rule runs even over an empty target
+        rep = check(rules=('always-green',), target='nothing')
+        assert rep.checked == ('always-green',) and rep.ok
+    finally:
+        assert unregister_rule('always-green') is rule
+    assert 'always-green' not in registered_rules()
+    with pytest.raises(KeyError, match='not registered'):
+        unregister_rule('always-green')
+
+
+@pytest.mark.parametrize('bad', [
+    dict(key='CamelCase', severity='error', requires=(), doc='', fn=len),
+    dict(key='x', severity='fatal', requires=(), doc='', fn=len),
+    dict(key='x', severity='error', requires=('gpu',), doc='', fn=len),
+    dict(key='x', severity='error', requires=(), doc='', fn=None),
+])
+def test_register_rule_validates(bad):
+    with pytest.raises(ValueError):
+        register_rule(AnalysisRule(**bad))
+
+
+def test_get_rule_unknown():
+    with pytest.raises(KeyError, match='unknown rule'):
+        get_rule('no-such-rule')
+
+
+def test_builtin_rules_registered():
+    assert set(registered_rules()) >= {
+        'int8-residency', 'vmem-fit', 'launch-budget', 'stage-carry',
+        'order-dag', 'hlo-traffic'}
+
+
+# ---------------------------------------------------- green on clean export
+
+
+@pytest.fixture(scope='module')
+def clean_pallas():
+    model, _, _, x = _resnet_export(use_pallas=True, exits=True)
+    return model, x
+
+
+def test_clean_export_green_all_rules(clean_pallas):
+    model, x = clean_pallas
+    rep = check(model, x=x)
+    assert rep.ok, str(rep)
+    # every builtin rule either ran or was skipped with a visible reason
+    covered = set(rep.checked) | {k for k, _ in rep.skipped}
+    assert covered >= set(registered_rules()), str(rep)
+    assert ('order-dag', 'target lacks sequence') in rep.skipped
+
+
+def test_clean_jnp_export_green_and_skips_pallas_rules():
+    model, _, _, x = _resnet_export(use_pallas=False)
+    rep = check(model, x=x)
+    assert rep.ok, str(rep)
+    # launch-budget still enforces plan-internal consistency on jnp;
+    # only the graph-counting vmem rule needs the pallas backend
+    assert 'launch-budget' in rep.checked
+    assert ('vmem-fit', 'target lacks pallas') in rep.skipped
+    # hlo-traffic ran for real on the jnp backend and reported its ratio
+    infos = [f for f in rep.by_rule('hlo-traffic') if f.severity == 'info']
+    assert infos and 'predicted' in infos[0].message
+
+
+# ------------------------------------------------------ red on every mutant
+
+
+@pytest.mark.parametrize('key', sorted(MUTANTS))
+def test_mutant_is_caught_by_exactly_its_rule(key):
+    kwargs = MUTANTS[key]()
+    assert kwargs['rules'] == (key,)       # verdict attributable to one rule
+    rep = check(**kwargs)
+    errs = [f for f in rep.by_rule(key) if f.severity == 'error']
+    assert errs, f'{key} mutant produced no error finding:\n{rep}'
+    assert not rep.ok
+    with pytest.raises(AnalysisError):
+        rep.raise_if_errors()
+
+
+# ----------------------------------------------------------------- order-dag
+
+
+def test_order_dag_reports_violated_edge():
+    rep = check(sequence='QP')
+    assert not rep.ok
+    (f,) = rep.by_rule('order-dag')
+    assert f.where == 'P->Q'
+    assert "'Q' before 'P'" in f.message
+
+
+def test_order_dag_accepts_theoretical_order_and_pipeline():
+    from repro.core.chain import Pipeline
+    assert check(sequence=planner.theoretical_order()).ok
+    pipe = Pipeline.from_sequence('DPQE', verify_order=True)  # no raise
+    assert pipe.verify_order().ok
+    with pytest.raises(AnalysisError):
+        Pipeline.from_sequence('QP', verify_order=True)
+    # opting out keeps wrong orders constructible (pairwise experiments)
+    assert Pipeline.from_sequence('QP').sequence == 'QP'
+
+
+def test_order_dag_unknown_key_warns_not_errors():
+    rep = check(sequence='DZ')
+    assert rep.ok                          # warn-severity only
+    assert any(f.severity == 'warn' and f.where == 'Z'
+               for f in rep.by_rule('order-dag'))
+
+
+def test_theoretical_dag_orders_distinct_classes_only():
+    edges = planner.theoretical_dag()
+    order = planner.theoretical_order()
+    for a, b in edges:
+        assert order.index(a) < order.index(b)
+        assert registry.get_pass(a).rank[:2] != registry.get_pass(b).rank[:2]
+    # same-class pair (L and Q: both static / sub-neuron) must be unordered
+    if {'L', 'Q'} <= set(registry.registered_keys()):
+        assert ('L', 'Q') not in edges and ('Q', 'L') not in edges
+        assert check(sequence='QL').ok and check(sequence='LQ').ok
+
+
+# --------------------------------------------------- report + export wiring
+
+
+def test_report_serializes_to_json():
+    rep = check(sequence='QP')
+    d = rep.to_dict()
+    assert json.loads(json.dumps(d)) == d
+    assert d['ok'] is False and d['findings'][0]['rule'] == 'order-dag'
+    assert 'FAIL' in str(rep) and 'P->Q' in str(rep)
+
+
+def test_finding_rejects_unknown_severity():
+    with pytest.raises(ValueError, match='unknown severity'):
+        Finding('r', 'fatal', 'm')
+
+
+def test_unsatisfiable_rules_skip_visibly():
+    rep = check()                          # no model, no sequence
+    assert rep.checked == () and rep.ok
+    assert {k for k, _ in rep.skipped} == set(registered_rules())
+
+
+def test_export_cnn_verify_attaches_report():
+    from repro.configs.cnn import RESNET8_CIFAR
+    from repro.core.export import export_cnn
+    from repro.models.cnn import init_cnn
+    cfg = RESNET8_CIFAR.replace(w_bits=8, a_bits=8)
+    params = init_cnn(jax.random.key(0), cfg)
+    x = jax.random.normal(jax.random.key(1), (2, 16, 16, 3))
+    with pytest.raises(ValueError, match='verify'):
+        export_cnn(params, cfg, use_pallas=False, calibrate=x,
+                   verify='bogus')
+    m = export_cnn(params, cfg, use_pallas=False, calibrate=x,
+                   verify='strict')       # clean export: strict must pass
+    assert isinstance(m.analysis, AnalysisReport) and m.analysis.ok
+    assert m.summary()['analysis']['ok'] is True
+    # un-verified exports don't carry a report (and summary stays lean)
+    m2 = export_cnn(params, cfg, use_pallas=False, calibrate=x)
+    assert m2.analysis is None and 'analysis' not in m2.summary()
+
+
+def test_strict_check_raises_with_report_attached(clean_pallas):
+    model, x = clean_pallas
+    probe = AnalysisRule(key='always-red', severity='error', requires=(),
+                         doc='', fn=lambda ctx, r: [r.finding('boom')])
+    register_rule(probe)
+    try:
+        with pytest.raises(AnalysisError) as ei:
+            check(model, x=x, rules=('always-red',), strict=True)
+        assert ei.value.report.by_rule('always-red')
+    finally:
+        unregister_rule('always-red')

@@ -9,6 +9,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.analysis import prim_count, walk_eqns
 from repro.configs.cnn import (MOBILENET_SMALL_CIFAR, RESNET8_CIFAR,
                                VGG8_CIFAR)
 from repro.core import quantization as quant_lib
@@ -175,18 +176,9 @@ def test_export_factored_pallas_matches_jnp_path():
 # --------------------------------------------------- int8-resident serving
 
 
-def _walk_eqns(jaxpr):
-    for eqn in jaxpr.eqns:
-        yield eqn
-        for v in eqn.params.values():
-            if hasattr(v, 'jaxpr'):
-                yield from _walk_eqns(v.jaxpr)
-            elif hasattr(v, 'eqns'):
-                yield from _walk_eqns(v)
-
-
-def _prim_count(jaxpr, name):
-    return sum(1 for e in _walk_eqns(jaxpr) if e.primitive.name == name)
+# jaxpr walking comes from the shared analyzer walker (repro/analysis) —
+# the SAME implementation the production rules enforce contracts with, so
+# what these tests count and what the CI gate checks can never drift apart
 
 
 @pytest.mark.parametrize('kind', sorted(CONFIGS))
@@ -238,8 +230,8 @@ def test_export_resident_no_dynamic_activation_scales():
     m_res = export_cnn(params, cfg, calibrate=x)
     dyn = jax.make_jaxpr(lambda x: m_dyn.fn(m_dyn.params, x))(x)
     res = jax.make_jaxpr(lambda x: m_res.fn(m_res.params, x))(x)
-    assert _prim_count(dyn.jaxpr, 'reduce_max') > 0
-    assert _prim_count(res.jaxpr, 'reduce_max') == 0
+    assert prim_count(dyn.jaxpr, 'reduce_max') > 0
+    assert prim_count(res.jaxpr, 'reduce_max') == 0
 
     before = quant_lib.WEIGHT_SCALE_COMPUTATIONS[0]
     jax.make_jaxpr(lambda x: m_res.fn(m_res.params, x))(x)
@@ -258,7 +250,7 @@ def test_export_resident_int8_at_kernel_boundaries(kind):
     model = export_cnn(params, cfg, use_pallas=True, calibrate=x)
     jaxpr = jax.make_jaxpr(
         lambda p, x: model.fn_exits(p, x))(model.params, x)
-    calls = [e for e in _walk_eqns(jaxpr.jaxpr)
+    calls = [e for e in walk_eqns(jaxpr.jaxpr)
              if e.primitive.name == 'pallas_call']
     assert calls, 'resident export must route through Pallas kernels'
     for e in calls:
@@ -272,7 +264,7 @@ def test_export_resident_int8_at_kernel_boundaries(kind):
     # depthwise) runs an int8 Pallas kernel
     assert model.summary()['n_fallback'] == 0
     n_fp32_convs = sum(
-        1 for e in _walk_eqns(jaxpr.jaxpr)
+        1 for e in walk_eqns(jaxpr.jaxpr)
         if e.primitive.name == 'conv_general_dilated'
         and e.outvars[0].aval.dtype == jnp.float32)
     assert n_fp32_convs == 0, n_fp32_convs
@@ -291,7 +283,7 @@ def test_export_resident_factored_single_launch():
     s = model.summary()
     assert s['n_fused_lowrank'] > 0
     jaxpr = jax.make_jaxpr(lambda p, x: model.fn(p, x))(model.params, x)
-    assert _prim_count(jaxpr.jaxpr, 'pallas_call') == s['kernel_launches']
+    assert prim_count(jaxpr.jaxpr, 'pallas_call') == s['kernel_launches']
     # exit-head launches are accounted separately: fn excludes them,
     # fn_exits adds exactly that many
     fam2, eparams, ecfg = _with_exits(RESNET8_CIFAR)
@@ -300,8 +292,8 @@ def test_export_resident_factored_single_launch():
     assert es['n_exit_heads'] == len(ecfg.exit_stages) > 0
     jx_fn = jax.make_jaxpr(lambda p, x: em.fn(p, x))(em.params, x)
     jx_ex = jax.make_jaxpr(lambda p, x: em.fn_exits(p, x))(em.params, x)
-    assert _prim_count(jx_fn.jaxpr, 'pallas_call') == es['kernel_launches']
-    assert _prim_count(jx_ex.jaxpr, 'pallas_call') == \
+    assert prim_count(jx_fn.jaxpr, 'pallas_call') == es['kernel_launches']
+    assert prim_count(jx_ex.jaxpr, 'pallas_call') == \
         es['kernel_launches'] + es['exit_head_launches']
     # and the oracle still holds through the fused kernels
     oracle = jax.jit(lambda p, x: cnn_forward(p, cfg, x))(params, x)
