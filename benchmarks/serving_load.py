@@ -25,7 +25,22 @@ per-scheduler latency/throughput/occupancy).  ``--smoke`` is the CI
 wiring: a tiny trace, asserts the scheduler drains the queue and answers
 match the oracle, writes nothing unless --out is given.
 
+``--chaos`` switches to the resilience benchmark over the replica pool
+(repro/serving/replica.py): the model is served from a persisted chain
+checkpoint through the registry, a bursty oversubscribed trace drives an
+elastic pool, and a seeded :class:`ChaosPlan` injects a mid-batch replica
+kill (failover restores a replacement through
+``ModelRegistry.restore`` — the chain-checkpoint path) plus a straggler
+slowdown (flagged and de-prioritized by the EWMA monitor).  Three runs on
+the same trace: chaos-off baseline, chaos-on (asserted zero-loss and
+bit-exact vs the baseline AND the request-alone oracle), and chaos-on
+with deadlines (asserted never-late: every deadline request is on time,
+degraded through an exit head, or rejected at admission).  Results go to
+BENCH_chaos.json (availability, SLO attainment, degraded-exit mix,
+failover count, p99 chaos-on vs chaos-off).
+
     PYTHONPATH=src python benchmarks/serving_load.py [--slots 32] [--requests 512]
+    PYTHONPATH=src python benchmarks/serving_load.py --chaos
 """
 from __future__ import annotations
 
@@ -64,6 +79,21 @@ def poisson_trace(xs, rate, seed=0):
     return [Request(i, xs[i], float(t[i])) for i in range(xs.shape[0])]
 
 
+def burst_trace(xs, rate, seed=0, n_bursts=2, burst=8):
+    """Poisson arrivals with injected spikes: ``n_bursts`` groups of
+    ``burst`` consecutive requests arrive at the same instant (the chaos
+    benchmark's arrival-burst element)."""
+    from repro.serving import Request
+    rng = np.random.default_rng(seed)
+    gaps = rng.exponential(1.0 / rate, size=xs.shape[0])
+    n = xs.shape[0]
+    for b in range(n_bursts):
+        s = int((b + 1) * n / (n_bursts + 1))
+        gaps[s:min(s + burst, n)] = 0.0
+    t = np.cumsum(gaps)
+    return [Request(i, xs[i], float(t[i])) for i in range(n)]
+
+
 def check_oracle(model, completions, reqs, threshold, slots):
     """Every sampled request's answer must be bit-exact vs the monolithic
     model serving that request ALONE, padded to the same slot geometry."""
@@ -80,6 +110,147 @@ def check_oracle(model, completions, reqs, threshold, slots):
                 c.logits, ans[0]):
             bad.append(r.rid)
     return bad
+
+
+def run_chaos(args, fam, cfg, params, xs, calib, threshold, stage_costs_us,
+              slots, use_pallas, out):
+    """The --chaos path: three replica-pool runs on one bursty trace.
+
+    A: chaos off (the undisturbed baseline).  B: seeded kill + straggler
+    slowdown — must drain with zero lost requests, every answer bit-exact
+    vs A and vs the request-alone oracle, failover restoring through the
+    registry's chain checkpoint.  C: B plus per-request deadlines — the
+    SLO layer must keep every admitted request on time (degrading through
+    the exit heads when the budget runs short), never silently late.
+    """
+    import tempfile
+
+    from repro.checkpoint import save_chain_state
+    from repro.core.passes import ChainState
+    from repro.serving import (ChaosPlan, ModelRegistry,
+                               ReplicaPoolScheduler, Request, SLOPolicy)
+
+    # serve from a persisted chain checkpoint so failover exercises the
+    # real restore path (registry -> chain_io -> re-export)
+    ckpt = tempfile.mkdtemp(prefix='chaos_ckpt_')
+    st = ChainState(family=fam, cfg=cfg, params=params,
+                    key=jax.random.key(7), exit_threshold=threshold)
+    save_chain_state(ckpt, st, step=0)
+    reg = ModelRegistry()
+    model = reg.load('cnn', ckpt, fam, use_pallas=use_pallas,
+                     calibrate=calib)
+
+    costs = [c * 1e-6 for c in stage_costs_us]
+    # oversubscribe the MAXED-OUT pool 2x: replicas stay busy for the
+    # whole trace (the seeded kill is guaranteed to land mid-batch) and
+    # elastic scaling is driven to its ceiling
+    rate = args.rate or 2.0 * args.max_replicas * slots / sum(costs)
+    trace = burst_trace(xs, rate, seed=0, burst=max(slots, 8))
+    pool_kw = dict(slots=slots, threshold=threshold, stage_costs=costs,
+                   replicas=args.replicas, min_replicas=args.replicas,
+                   max_replicas=args.max_replicas,
+                   restore=lambda: reg.restore('cnn'),
+                   restore_delay=costs[0])
+
+    base_comp, base_met = ReplicaPoolScheduler(
+        model, **pool_kw).run_trace(trace)
+    assert len(base_comp) == len(trace), 'baseline run lost requests'
+
+    # chaos times are fractions of the baseline run's MEASURED makespan,
+    # not the arrival horizon — on an oversubscribed trace most serving
+    # happens in the drain phase, and an a-priori work estimate misses
+    # how much early exits shrink it (a kill seeded past the true
+    # makespan would never fire)
+    makespan = max(c.t_done for c in base_comp.values())
+    plan = ChaosPlan.seeded(args.chaos_seed, args.replicas, makespan)
+
+    chaos_comp, chaos_met = ReplicaPoolScheduler(
+        model, chaos=plan, **pool_kw).run_trace(trace)
+    b_sum, c_sum = base_met.summary(), chaos_met.summary()
+    res = c_sum['resilience']
+    assert len(chaos_comp) == len(trace), 'chaos run lost requests'
+    assert c_sum['availability'] == 1.0, 'chaos run rejected requests'
+    assert res['kills'] >= 1 and res['failovers'] >= 1, 'no kill fired'
+    assert any(i.get('mid_batch') for k, _, i in chaos_met.events
+               if k == 'kill'), 'kill landed on an idle replica'
+    assert res['straggler_flags'] >= 1, 'slowdown never flagged'
+    for r in trace:
+        b, c = base_comp[r.rid], chaos_comp[r.rid]
+        assert c.exit_stage == b.exit_stage and np.array_equal(
+            c.logits, b.logits), f'request {r.rid} diverged under chaos'
+    oracle_reqs = (trace if (args.smoke or args.oracle_all)
+                   else trace[:: max(1, len(trace) // 16)])
+    bad = check_oracle(model, chaos_comp, oracle_reqs, threshold, slots)
+    assert not bad, f'chaos: requests {bad[:8]} diverge from oracle'
+
+    full_cost = sum(costs)
+    rng = np.random.default_rng(args.chaos_seed + 1)
+    budgets = full_cost * rng.uniform(0.5, 6.0, size=len(trace))
+    slo_trace = [Request(r.rid, r.x, r.t_arrival,
+                         deadline=r.t_arrival + float(budgets[i]))
+                 for i, r in enumerate(trace)]
+    slo_comp, slo_met = ReplicaPoolScheduler(
+        model, chaos=plan, slo=SLOPolicy(), **pool_kw).run_trace(slo_trace)
+    s_sum = slo_met.summary()
+    assert s_sum['slo']['n_late'] == 0, 'never-late contract violated'
+    for c in slo_comp.values():
+        if not c.degraded:
+            b = base_comp[c.rid]
+            assert c.exit_stage == b.exit_stage and np.array_equal(
+                c.logits, b.logits), \
+                f'request {c.rid} diverged under chaos+SLO'
+
+    results = {
+        'backend': jax.default_backend(),
+        'int8_path': 'pallas' if use_pallas else 'jnp-ref',
+        'config': cfg.name,
+        'batch_geometry': {'slots': slots, 'image': [32, 32, 3]},
+        'n_requests': len(trace),
+        'arrival_rate_rps': round(rate, 3),
+        'exit_threshold': round(threshold, 6),
+        'pool': {'replicas': args.replicas, 'min_replicas': args.replicas,
+                 'max_replicas': args.max_replicas},
+        'timing': {'iters': args.iters, 'reduction': 'median',
+                   'stage_costs_us': [round(c, 1) for c in stage_costs_us]},
+        'chaos_plan': {'seed': args.chaos_seed,
+                       'kills': [list(k) for k in plan.kills],
+                       'slowdowns': [list(s) for s in plan.slowdowns]},
+        'deadline_budget_x_full_depth': [0.5, 6.0],
+        'chaos_off': b_sum,
+        'chaos_on': c_sum,
+        'chaos_slo': s_sum,
+        'availability': c_sum['availability'],
+        'slo_attainment': s_sum['slo']['attainment'],
+        'degraded_exit_mix': s_sum['degraded_exit_mix'],
+        'failovers': res['failovers'],
+        'p99_chaos_off_s': b_sum['p99_latency_s'],
+        'p99_chaos_on_s': c_sum['p99_latency_s'],
+        'chaos_p99_x': round(c_sum['p99_latency_s']
+                             / max(b_sum['p99_latency_s'], 1e-12), 3),
+    }
+    print(f"{cfg.name} slots={slots} rate={rate:.0f}/s pool="
+          f"{args.replicas}..{args.max_replicas} replicas")
+    print(f"  chaos off: p99={b_sum['p99_latency_s'] * 1e3:.2f}ms "
+          f"throughput={b_sum['throughput_rps']:.0f} req/s")
+    print(f"  chaos on:  p99={c_sum['p99_latency_s'] * 1e3:.2f}ms "
+          f"({results['chaos_p99_x']:.2f}x) availability="
+          f"{c_sum['availability']:.4f} kills={res['kills']} "
+          f"failovers={res['failovers']} "
+          f"straggler_flags={res['straggler_flags']} "
+          f"peak_replicas={res['peak_replicas']}")
+    print(f"  chaos+SLO: attainment={s_sum['slo']['attainment']:.4f} "
+          f"on_time={s_sum['slo']['n_on_time']} "
+          f"late={s_sum['slo']['n_late']} "
+          f"degraded={s_sum['n_degraded']} "
+          f"rejected={s_sum['n_rejected']} "
+          f"degraded_mix={s_sum['degraded_exit_mix']}")
+    if args.smoke:
+        print('chaos smoke OK: zero lost, bit-exact under kill+straggler, '
+              'no late completion')
+    if out:
+        with open(out, 'w') as f:
+            json.dump(results, f, indent=1)
+        print(f'wrote {out}')
 
 
 def main():
@@ -114,14 +285,25 @@ def main():
                     help='tiny CI run: 24 requests, 8 slots, 2 iters, '
                          'asserts drain + bit-exact answers, no file '
                          'output unless --out is given')
+    ap.add_argument('--chaos', action='store_true',
+                    help='resilience benchmark: replica pool under seeded '
+                         'kill + straggler + bursts (BENCH_chaos.json)')
+    ap.add_argument('--chaos-seed', type=int, default=0)
+    ap.add_argument('--replicas', type=int, default=2,
+                    help='--chaos: initial replica count')
+    ap.add_argument('--max-replicas', type=int, default=4,
+                    help='--chaos: elastic scaling ceiling')
     ap.add_argument('--out', default=None)
     args = ap.parse_args()
     if args.smoke:
         args.slots, args.requests, args.iters = 8, 24, 2
+        if args.chaos:
+            args.requests = 32        # enough in-flight work for the kill
     out = args.out
     if out is None and not args.smoke:
         out = os.path.join(os.path.dirname(os.path.dirname(
-            os.path.abspath(__file__))), 'BENCH_load.json')
+            os.path.abspath(__file__))),
+            'BENCH_chaos.json' if args.chaos else 'BENCH_load.json')
 
     use_pallas = args.pallas or jax.default_backend() == 'tpu'
     slots = batch_slots(args.slots)
@@ -147,6 +329,10 @@ def main():
 
     stage_costs_us, mono_us = measure_stage_costs(
         model, calib, iters=args.iters)
+
+    if args.chaos:
+        return run_chaos(args, fam, cfg, params, xs, calib, threshold,
+                         stage_costs_us, slots, use_pallas, out)
 
     # service capacities (req/s) from the median costs and the calibration
     # batch's exit mix: static pays the monolithic cost for every slot;

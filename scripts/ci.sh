@@ -39,6 +39,14 @@ python benchmarks/serving_int8.py --smoke
 # geometry (the early-exit compaction contract).  Writes no BENCH file.
 python benchmarks/serving_load.py --smoke
 
+# resilience smoke: the same trace (plus arrival bursts) through the
+# replica pool under a seeded chaos plan — a replica killed mid-batch and
+# a straggler slowdown.  Asserts the pool drains with zero lost requests,
+# fails over through the registry restore path, and every completion is
+# bit-exact vs the undisturbed run; the chaos+SLO leg asserts no admitted
+# request ever finishes past its deadline.  Writes no BENCH file.
+python benchmarks/serving_load.py --smoke --chaos
+
 # static-analysis gate (repro/analysis): every rule must be green on the
 # shipped exports of all three CNN kinds (both backends + the theoretical
 # sequence) AND red on its deliberately-mutated export — a rule that stops

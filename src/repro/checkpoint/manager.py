@@ -17,13 +17,17 @@ restarted on a smaller/larger pod slice resumes seamlessly (reshard-on-load).
 from __future__ import annotations
 
 import json
+import logging
 import os
 import shutil
 import threading
+import zipfile
 
 import jax
 import ml_dtypes
 import numpy as np
+
+log = logging.getLogger('repro.checkpoint')
 
 SEP = '/'
 
@@ -80,12 +84,17 @@ def save_checkpoint(ckpt_dir: str, step: int, tree, *, process_index=0):
     return final
 
 
-def latest_step(ckpt_dir: str) -> int | None:
+def committed_steps(ckpt_dir: str) -> list[int]:
+    """All committed (renamed, non-.tmp) step numbers, ascending."""
     if not os.path.isdir(ckpt_dir):
-        return None
-    steps = [int(d.split('_')[1]) for d in os.listdir(ckpt_dir)
-             if d.startswith('step_') and not d.endswith('.tmp')]
-    return max(steps) if steps else None
+        return []
+    return sorted(int(d.split('_')[1]) for d in os.listdir(ckpt_dir)
+                  if d.startswith('step_') and not d.endswith('.tmp'))
+
+
+def latest_step(ckpt_dir: str) -> int | None:
+    steps = committed_steps(ckpt_dir)
+    return steps[-1] if steps else None
 
 
 def load_checkpoint(ckpt_dir: str, step: int | None, tree_like, *,
@@ -148,6 +157,29 @@ class CheckpointManager:
                           ignore_errors=True)
 
     def restore_latest(self, tree_like, shardings=None):
+        """Restore the newest *readable* committed checkpoint.
+
+        The tmp-rename protocol keeps a torn SAVE from ever becoming the
+        latest step, but a committed step can still rot afterwards (disk
+        corruption, a truncating copy, bit flips).  Rather than dying on
+        the newest step's bad manifest/npz, fall back step by step to the
+        most recent one that loads — losing ckpt_every steps of progress
+        beats losing the job.  Raises FileNotFoundError only when no
+        committed step is readable."""
         self.wait()
-        return load_checkpoint(self.dir, None, tree_like,
-                               shardings=shardings)
+        steps = committed_steps(self.dir)
+        if not steps:
+            raise FileNotFoundError(f'no checkpoints under {self.dir}')
+        last_err = None
+        for step in reversed(steps):
+            try:
+                return load_checkpoint(self.dir, step, tree_like,
+                                       shardings=shardings)
+            except (ValueError, KeyError, OSError, EOFError,
+                    zipfile.BadZipFile) as e:   # ValueError covers JSON
+                log.warning('checkpoint step %d unreadable (%s); '
+                            'falling back', step, e)
+                last_err = e
+        raise FileNotFoundError(
+            f'no readable checkpoint under {self.dir} '
+            f'({len(steps)} committed steps, all corrupt)') from last_err

@@ -18,6 +18,16 @@ throughput, exit mix, and batch occupancy.
 
     PYTHONPATH=src python -m repro.launch.serve_cnn --server \
         --requests 256 --rate 800 --slots 32
+
+``--deadline-ms`` attaches per-request deadlines and turns on the SLO
+layer (deadline admission + graceful degradation through the exit heads;
+no admitted request finishes late).  ``--chaos`` serves the trace on the
+replica pool under a seeded fault plan (replica kill mid-batch, straggler
+slowdown) and reports availability/failover/straggler counters.  Both run
+on a simulated clock built from locally measured stage costs.
+
+    PYTHONPATH=src python -m repro.launch.serve_cnn --server \
+        --requests 128 --deadline-ms 40 --chaos --replicas 2
 """
 from __future__ import annotations
 
@@ -29,12 +39,33 @@ import jax.numpy as jnp
 import numpy as np
 
 
+def _measure_stage_costs(model, x, iters=5):
+    """Median per-segment batch cost (seconds) at the geometry of ``x`` —
+    the simulated clock for --deadline-ms / --chaos runs."""
+    costs, carry = [], x
+    for k in range(model.n_stages):
+        fn = model.stage_fns[k]
+        jax.block_until_ready(fn(model.params, carry))   # compile off-clock
+        ts = []
+        for _ in range(iters):
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn(model.params, carry))
+            ts.append(time.perf_counter() - t0)
+        costs.append(float(np.median(ts)))
+        if k < model.n_stages - 1:
+            _, carry = model.run_stage(k, carry)
+    return costs
+
+
 def _serve_trace(model, fam, cfg, args):
     """--server mode: drive the request scheduler over a Poisson trace on
     the wall clock (cf. benchmarks/serving_load.py for the median-cost
-    simulated A/B against static batching)."""
+    simulated A/B against static batching).  --deadline-ms adds the SLO
+    layer and --chaos runs the replica pool under a seeded fault plan —
+    both on the simulated clock built from locally measured stage costs."""
     from repro.core.export import calibrate_exit_threshold
-    from repro.serving import ContinuousBatchScheduler, Request
+    from repro.serving import (ChaosPlan, ContinuousBatchScheduler,
+                               ReplicaPoolScheduler, Request, SLOPolicy)
 
     rng = np.random.default_rng(0)
     stream = fam.eval_batches(-(-args.requests // args.batch), args.batch)
@@ -45,10 +76,38 @@ def _serve_trace(model, fam, cfg, args):
         threshold = calibrate_exit_threshold(model, xs[:args.slots])
         print(f'calibrated exit threshold: {threshold:.4f}')
     t = np.cumsum(rng.exponential(1.0 / args.rate, size=args.requests))
-    reqs = [Request(i, xs[i], float(t[i])) for i in range(args.requests)]
-    sched = ContinuousBatchScheduler(
-        model, slots=args.slots, threshold=threshold,
-        max_wait=args.max_wait)
+    deadlines = [None] * args.requests
+    if args.deadline_ms is not None:
+        deadlines = [float(ti) + args.deadline_ms * 1e-3 for ti in t]
+    reqs = [Request(i, xs[i], float(t[i]), deadline=deadlines[i])
+            for i in range(args.requests)]
+    simulated = args.chaos or args.deadline_ms is not None
+    if simulated:
+        # the SLO layer and the replica pool need a deterministic clock:
+        # measure per-segment batch costs locally and simulate on them
+        costs = _measure_stage_costs(model, xs[:args.slots])
+        print('measured stage costs: '
+              + ' '.join(f'{c * 1e3:.2f}ms' for c in costs))
+        slo = SLOPolicy(stage_costs=costs) \
+            if args.deadline_ms is not None else None
+        if args.chaos:
+            horizon = max(float(t[-1]),
+                          args.requests / args.slots * sum(costs)
+                          / args.replicas)
+            plan = ChaosPlan.seeded(args.chaos_seed, args.replicas, horizon)
+            sched = ReplicaPoolScheduler(
+                model, slots=args.slots, threshold=threshold,
+                stage_costs=costs, slo=slo, replicas=args.replicas,
+                min_replicas=args.replicas, max_replicas=args.max_replicas,
+                restore=lambda: model, restore_delay=costs[0], chaos=plan)
+        else:
+            sched = ContinuousBatchScheduler(
+                model, slots=args.slots, threshold=threshold,
+                stage_costs=costs, max_wait=args.max_wait, slo=slo)
+    else:
+        sched = ContinuousBatchScheduler(
+            model, slots=args.slots, threshold=threshold,
+            max_wait=args.max_wait)
     # warm EVERY stage program off the clock: threshold 2.0 means nothing
     # exits, so the warm batch traverses all segments (a real-threshold
     # warm-up could exit at head 1 and leave deeper segments uncompiled,
@@ -59,17 +118,36 @@ def _serve_trace(model, fam, cfg, args):
              for i in range(min(4, args.requests))])
     completions, metrics = sched.run_trace(reqs)
     s = metrics.summary()
-    hit = sum(1 for i in range(args.requests)
-              if completions[i].pred == int(ys[i]))
+    hit = sum(1 for i, c in completions.items() if c.pred == int(ys[i]))
     print(f'config={cfg.name} backend={jax.default_backend()} '
-          f'slots={sched.slots} threshold={threshold:.3f}')
+          f'slots={sched.slots} threshold={threshold:.3f}'
+          + (' clock=simulated' if simulated else ''))
     print(f"served {s['n_requests']} requests at rate={args.rate:.0f}/s: "
           f"throughput={s['throughput_rps']:.0f} req/s "
           f"p50={s['p50_latency_s'] * 1e3:.2f}ms "
           f"p99={s['p99_latency_s'] * 1e3:.2f}ms "
-          f"acc={hit / max(args.requests, 1):.3f}")
+          f"acc={hit / max(len(completions), 1):.3f}")
     print(f"  exit mix: {s['exit_mix']}  "
           f"occupancy: {s['batch_occupancy']}")
+    print(f"  latency split: queue-wait p50={s['p50_queue_wait_s'] * 1e3:.2f}"
+          f"ms p99={s['p99_queue_wait_s'] * 1e3:.2f}ms | execute "
+          f"p50={s['p50_execute_s'] * 1e3:.2f}ms "
+          f"p99={s['p99_execute_s'] * 1e3:.2f}ms")
+    if 'slo' in s:
+        slo_s = s['slo']
+        print(f"  SLO deadline={args.deadline_ms:.1f}ms: "
+              f"attainment={slo_s['attainment']:.3f} "
+              f"late={slo_s['n_late']} rejected={s['n_rejected']} "
+              f"degraded={s['n_degraded']} "
+              f"(mix {s['degraded_exit_mix']})")
+        assert slo_s['n_late'] == 0, 'never-late contract violated'
+    if 'resilience' in s:
+        r = s['resilience']
+        print(f"  chaos: availability={s['availability']:.4f} "
+              f"kills={r['kills']} failovers={r['failovers']} "
+              f"straggler_flags={r['straggler_flags']} "
+              f"evictions={r['evictions']} "
+              f"peak_replicas={r['peak_replicas']}")
 
 
 def main():
@@ -114,7 +192,23 @@ def main():
     ap.add_argument('--max-wait', type=float, default=0.05,
                     help='--server: run a partial batch once its oldest '
                          'request has waited this long (seconds)')
+    ap.add_argument('--deadline-ms', type=float, default=None,
+                    help='--server: per-request deadline after arrival; '
+                         'enables the SLO layer (deadline admission + '
+                         'graceful degradation through the exit heads) on '
+                         'a simulated clock from measured stage costs')
+    ap.add_argument('--chaos', action='store_true',
+                    help='--server: run the replica pool under a seeded '
+                         'fault plan (kill + straggler slowdown) and '
+                         'report resilience counters; implies --server')
+    ap.add_argument('--chaos-seed', type=int, default=0)
+    ap.add_argument('--replicas', type=int, default=2,
+                    help='--chaos: provisioned replica count')
+    ap.add_argument('--max-replicas', type=int, default=4,
+                    help='--chaos: elastic scale-up ceiling')
     args = ap.parse_args()
+    if args.chaos:
+        args.server = True
     if args.server or args.verify:
         args.resident = True
 

@@ -12,6 +12,13 @@ collectives act as barriers).  Mitigation implemented here:
     (runtime/elastic.py) on the next restart.
 
 On-device timing comes from the launcher; in tests times are injected.
+
+The serving replica pool (repro/serving/replica.py) re-keys the monitor to
+*replicas*: hosts are replica ids and the observed quantity is each
+batch's cost normalized by the expected stage cost (healthy ~1.0), fed one
+at a time through :meth:`StragglerMonitor.observe_one` as batches land —
+a flagged replica is de-prioritized for new dispatches and, after
+``evict_after`` consecutive flags, replaced through the failover path.
 """
 from __future__ import annotations
 
@@ -51,6 +58,31 @@ class StragglerMonitor:
             else:
                 self.flags.pop(h, None)
         return actions
+
+    def observe_one(self, host: int, t: float):
+        """Feed ONE host's observation (the serving pool's re-keying:
+        batches land one at a time, ``t`` is the batch cost normalized by
+        the expected stage cost).  Updates the fleet EWMA and this host's
+        flag count; returns mitigation actions — ``('flag', host)`` on
+        each threshold crossing and ``('evict', host)`` after
+        ``evict_after`` consecutive ones.  Hosts need not be < n_hosts
+        (replica ids grow as the pool fails over); the host_map/spares
+        machinery is untouched."""
+        actions = []
+        self.ewma = t if self.ewma is None else \
+            (1 - self.alpha) * self.ewma + self.alpha * t
+        if t > self.threshold * self.ewma:
+            self.flags[host] = self.flags.get(host, 0) + 1
+            actions.append(('flag', host))
+            if self.flags[host] >= self.evict_after:
+                actions.append(('evict', host))
+        else:
+            self.flags.pop(host, None)
+        return actions
+
+    def flagged(self, host: int) -> bool:
+        """Is ``host`` currently flagged as a straggler?"""
+        return self.flags.get(host, 0) > 0
 
     def data_host_id(self, logical_host: int) -> int:
         """Physical host currently serving a logical data shard."""

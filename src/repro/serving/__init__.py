@@ -2,16 +2,24 @@
 
 Where the compression chain's output meets traffic: a time-gated request
 queue (``request.py``), a continuous-batching scheduler that compacts
-early-exited slots and backfills from the queue (``scheduler.py``), a
-checkpoint-backed model registry (``registry.py``), and the latency/
-throughput/occupancy metrics layer (``metrics.py``).  Driven by
+early-exited slots and backfills from the queue (``scheduler.py``), an
+SLO layer for deadline admission and graceful degradation through the
+exit heads (``slo.py``), an elastic replica pool with straggler
+de-prioritization and chaos-tested checkpoint-backed failover
+(``replica.py``), a registry that loads and restores models from chain
+checkpoints (``registry.py``), and the latency/throughput/occupancy/SLO/
+resilience metrics layer (``metrics.py``).  Driven by
 ``launch/serve_cnn.py --server`` and benchmarked (static batching vs
-early-exit compaction under a Poisson trace) by
-``benchmarks/serving_load.py``.
+early-exit compaction under a Poisson trace; ``--chaos`` for the
+resilience run) by ``benchmarks/serving_load.py``.  See ``README.md``
+in this package for the scheduler contract and failure model.
 """
 from repro.serving.metrics import ServingMetrics, percentile  # noqa: F401
 from repro.serving.registry import ModelRegistry  # noqa: F401
+from repro.serving.replica import (ChaosPlan,  # noqa: F401
+                                   ReplicaPoolScheduler)
 from repro.serving.request import (Completion, Request,  # noqa: F401
                                    RequestQueue)
 from repro.serving.scheduler import (ContinuousBatchScheduler,  # noqa: F401
                                      StaticBatchScheduler, exit_decisions)
+from repro.serving.slo import SLOPolicy  # noqa: F401

@@ -1,11 +1,24 @@
-"""Serving metrics: latency percentiles, throughput, exit mix, occupancy.
+"""Serving metrics: latency percentiles, throughput, exit mix, occupancy,
+SLO attainment, and resilience events.
 
 One :class:`ServingMetrics` instance rides along with a scheduler run.  The
-scheduler reports every completion and every executed batch (stage index +
-live-slot count); ``summary()`` folds them into the numbers the benchmark
-records — p50/p99 latency, throughput over the makespan, the per-stage
-exit distribution, and batch occupancy (the fraction of slots doing useful
-work, the quantity early-exit compaction exists to raise).
+scheduler reports every completion, every executed batch (stage index +
+live-slot count), every SLO rejection, and — on the replica pool — every
+resilience event (replica kill, failover, straggler flag, scale up/down);
+``summary()`` folds them into the numbers the benchmarks record:
+
+* p50/p99 end-to-end latency, split into **queue-wait** (arrival ->
+  service start, ``Completion.t_start``) and **execute** (service start ->
+  done) percentiles;
+* throughput over the makespan and batch occupancy (the fraction of slots
+  doing useful work, the quantity early-exit compaction exists to raise);
+* **availability** (completions / offered requests — 1.0 means zero lost
+  even under chaos), **SLO attainment** (on-time completions over all
+  deadline-carrying requests, rejected included), the **degraded-exit
+  mix** (requests the SLO layer force-exited at an earlier head), and
+  ``n_late`` — by the never-late contract this must be 0;
+* resilience counters: ``failovers``, ``kills``, ``straggler_flags``,
+  ``scale_ups``/``scale_downs``, peak replica count.
 
 Percentiles interpolate between order statistics (numpy's 'linear'
 definition) so small smoke traces still give stable numbers.
@@ -32,14 +45,33 @@ def percentile(values, q: float) -> float:
 class ServingMetrics:
     """Accumulates per-completion and per-batch records for one run."""
     latencies: list = field(default_factory=list)
+    queue_waits: list = field(default_factory=list)
+    executes: list = field(default_factory=list)
     exit_stages: list = field(default_factory=list)
+    degraded_stages: list = field(default_factory=list)
     batches: list = field(default_factory=list)   # (stage_idx, live, slots)
+    rejections: list = field(default_factory=list)  # (rid, t, reason)
+    events: list = field(default_factory=list)    # (kind, t, info)
+    n_deadline: int = 0
+    n_on_time: int = 0
+    n_late: int = 0
     t_first_arrival: float | None = None
     t_last_done: float = 0.0
 
     def record_completion(self, c) -> None:
         self.latencies.append(c.latency)
         self.exit_stages.append(c.exit_stage)
+        if c.degraded:
+            self.degraded_stages.append(c.exit_stage)
+        if c.t_start is not None:
+            self.queue_waits.append(c.queue_wait)
+            self.executes.append(c.execute)
+        if c.deadline is not None:
+            self.n_deadline += 1
+            if c.on_time:
+                self.n_on_time += 1
+            else:
+                self.n_late += 1
         if self.t_first_arrival is None or c.t_arrival < self.t_first_arrival:
             self.t_first_arrival = c.t_arrival
         self.t_last_done = max(self.t_last_done, c.t_done)
@@ -47,8 +79,21 @@ class ServingMetrics:
     def record_batch(self, stage_idx: int, live: int, slots: int) -> None:
         self.batches.append((stage_idx, live, slots))
 
+    def record_rejection(self, rid: int, t: float, reason: str) -> None:
+        """An SLO-rejected request: counted, never served late."""
+        self.rejections.append((rid, t, reason))
+
+    def record_event(self, kind: str, t: float, **info) -> None:
+        """A resilience event from the replica pool: 'kill', 'failover',
+        'straggler_flag', 'scale_up', 'scale_down', 'evict'."""
+        self.events.append((kind, t, info))
+
+    def _count_events(self, kind: str) -> int:
+        return sum(1 for k, _, _ in self.events if k == kind)
+
     def summary(self) -> dict:
         n = len(self.latencies)
+        offered = n + len(self.rejections)
         makespan = (self.t_last_done - (self.t_first_arrival or 0.0)
                     if n else 0.0)
         exited = sum(1 for s in self.exit_stages if s >= 0)
@@ -57,10 +102,14 @@ class ServingMetrics:
                for s in stages}
         slots = {s: next(sl for st, _, sl in self.batches if st == s)
                  for s in stages}
-        return {
+        out = {
             'n_requests': n,
             'p50_latency_s': round(percentile(self.latencies, 50), 6),
             'p99_latency_s': round(percentile(self.latencies, 99), 6),
+            'p50_queue_wait_s': round(percentile(self.queue_waits, 50), 6),
+            'p99_queue_wait_s': round(percentile(self.queue_waits, 99), 6),
+            'p50_execute_s': round(percentile(self.executes, 50), 6),
+            'p99_execute_s': round(percentile(self.executes, 99), 6),
             'throughput_rps': round(n / makespan, 3) if makespan > 0 else 0.0,
             'exit_fraction': round(exited / n, 4) if n else 0.0,
             'exit_mix': {str(s): self.exit_stages.count(s)
@@ -69,4 +118,32 @@ class ServingMetrics:
             'batch_occupancy': {
                 str(s): round(sum(occ[s]) / (len(occ[s]) * slots[s]), 4)
                 for s in stages if occ[s]},
+            'availability': round(n / offered, 4) if offered else 0.0,
+            'n_rejected': len(self.rejections),
+            'n_degraded': len(self.degraded_stages),
+            'degraded_exit_mix': {
+                str(s): self.degraded_stages.count(s)
+                for s in sorted(set(self.degraded_stages))},
         }
+        if self.n_deadline or self.rejections:
+            denom = self.n_deadline + len(self.rejections)
+            out['slo'] = {
+                'n_with_deadline': denom,
+                'n_on_time': self.n_on_time,
+                'n_late': self.n_late,
+                'attainment': round(self.n_on_time / denom, 4)
+                if denom else 0.0,
+            }
+        if self.events:
+            out['resilience'] = {
+                'kills': self._count_events('kill'),
+                'failovers': self._count_events('failover'),
+                'straggler_flags': self._count_events('straggler_flag'),
+                'evictions': self._count_events('evict'),
+                'scale_ups': self._count_events('scale_up'),
+                'scale_downs': self._count_events('scale_down'),
+                'peak_replicas': max(
+                    (i.get('n_replicas', 0) for _, _, i in self.events),
+                    default=0),
+            }
+        return out

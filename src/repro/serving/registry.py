@@ -7,8 +7,13 @@ into a live :class:`~repro.core.export.ServingModel` — loading the
 ChainState, exporting through the family's registered serving backend
 (``calibrate`` selects the int8-resident plan the scheduler's
 bit-exactness contract wants), and keeping it addressable by name so the
-launcher/scheduler can route requests.  Multi-model placement across
-devices is the scaling PR this scaffolding exists for.
+launcher/scheduler can route requests.
+
+It is also the failover authority: :meth:`restore` re-exports a named
+model from the SAME persisted chain checkpoint its original ``load`` used
+— the replica pool (serving/replica.py) calls it when a replica dies
+mid-batch, and because export is deterministic from the ChainState the
+replacement replica's answers are bit-exact with the dead one's.
 """
 from __future__ import annotations
 
@@ -21,6 +26,7 @@ class ModelRegistry:
 
     def __init__(self):
         self._models = {}
+        self._sources = {}        # name -> (ckpt_dir, family, load kwargs)
 
     def register(self, name: str, model) -> None:
         """Register an already-exported ServingModel under ``name``."""
@@ -35,12 +41,35 @@ class ModelRegistry:
         ``calibrate`` (a sample batch) compiles the int8-resident layer
         plan — required for the scheduler's bit-exact compaction; the
         chain's stored ``exit_threshold`` rides along via export_chain.
-        Returns the registered ServingModel.
+        The checkpoint source is remembered so :meth:`restore` can
+        re-export the model after a replica failure.  Returns the
+        registered ServingModel.
         """
         state, _ = load_chain_state(ckpt_dir, family, step=step)
         model = export_chain(state, use_pallas=use_pallas,
                              calibrate=calibrate)
         self.register(name, model)
+        self._sources[name] = (ckpt_dir, family,
+                               dict(step=step, use_pallas=use_pallas,
+                                    calibrate=calibrate))
+        return model
+
+    def restore(self, name: str):
+        """Failover: re-export ``name`` from its persisted chain
+        checkpoint (the dir its ``load`` read).  Returns a FRESH
+        ServingModel — bit-exact with the original because the export is
+        deterministic from the ChainState — and re-points the registry
+        entry at it.  Raises KeyError for models registered directly
+        (no checkpoint to restore from)."""
+        if name not in self._sources:
+            raise KeyError(
+                f'model {name!r} has no checkpoint source (registered '
+                f'directly, not loaded); failover needs a load()ed model')
+        ckpt_dir, family, kw = self._sources[name]
+        state, _ = load_chain_state(ckpt_dir, family, step=kw['step'])
+        model = export_chain(state, use_pallas=kw['use_pallas'],
+                             calibrate=kw['calibrate'])
+        self._models[name] = model
         return model
 
     def get(self, name: str):

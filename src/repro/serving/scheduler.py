@@ -1,4 +1,5 @@
-"""Request-level schedulers: continuous batching with early-exit compaction.
+"""Request-level schedulers: continuous batching with early-exit compaction
+and (optionally) SLO-aware admission/degradation.
 
 Two schedulers share one contract (``run_trace(requests) -> (completions,
 metrics)``) so the load benchmark can A/B them on the same arrival trace:
@@ -8,9 +9,9 @@ metrics)``) so the load benchmark can A/B them on the same arrival trace:
   early-exit rule afterwards.  Exits change which head answers but save no
   compute: one hard sample holds every exited slot hostage to full depth.
 
-* :class:`ContinuousBatchScheduler` — the tentpole: the model's layer plan
-  is split at the exit boundaries (``ServingModel.stage_fns``).  Each
-  round runs ONE segment on a batch padded to the tile geometry
+* :class:`ContinuousBatchScheduler` — the model's layer plan is split at
+  the exit boundaries (``ServingModel.stage_fns``).  Each round runs ONE
+  segment on a batch padded to the tile geometry
   (``kernels/tiling.batch_slots``); samples whose exit confidence clears
   the threshold complete immediately, surviving slots are *compacted*
   (gathered dense) into the next segment's pending buffer, and the freed
@@ -19,6 +20,19 @@ metrics)``) so the load benchmark can A/B them on the same arrival trace:
   :class:`~repro.core.export.QAct` — the inter-stage traffic the E pass
   actually leaves alive.
 
+The replica-pool scheduler (serving/replica.py) subclasses the continuous
+scheduler: same pending buffers and landing logic, event-driven over N
+elastic replicas with straggler de-prioritization and chaos-tested
+failover.
+
+SLO mode (``slo=SLOPolicy(...)``, serving/slo.py): requests with a
+``deadline`` are rejected at admission when their budget cannot cover the
+queue ahead of them, urgent partial batches override wait-to-fill, and a
+survivor whose budget can no longer cover its next segment is
+force-completed NOW from its stored exit-head logits (a *degraded*
+completion) — every SLO decision is made before the clock advances, so an
+admitted request is degraded or completes on time, never silently late.
+
 Bit-exactness contract: slots are independent at fixed batch geometry
 (convs, matmuls, GroupNorm, softmax are all per-sample at fixed B), so on
 a *resident* export every request's answer is bit-exact vs the monolithic
@@ -26,7 +40,9 @@ a *resident* export every request's answer is bit-exact vs the monolithic
 of which requests shared its batches.  The dynamic-scale export computes
 per-batch activation abs-max scales, so its answers depend on slot
 composition; the scheduler still runs it, but the bit-exactness guarantee
-(and the CI smoke assertion) applies to resident exports.
+(and the CI smoke assertion) applies to resident exports.  A *degraded*
+completion's logits are still bit-exact — they are the head's own row
+from a normally-executed segment; only the exit DECISION was forced.
 
 Time: the scheduler advances a single-executor clock.  ``stage_costs``
 injects measured per-segment batch costs (the benchmark's simulated clock
@@ -123,11 +139,20 @@ class ContinuousBatchScheduler:
     see the module docstring for the resident-export bit-exactness
     contract.  ``slots`` is padded up to the tile geometry and stays fixed
     for the scheduler's lifetime.  ``threshold=None`` uses the chain's
-    calibrated operating point (``model.exit_threshold``).
+    calibrated operating point (``model.exit_threshold``).  ``slo`` (an
+    :class:`~repro.serving.slo.SLOPolicy`) enables deadline admission and
+    graceful degradation; its cost estimates are seeded from
+    ``stage_costs`` when given, else learned online from wall time.
+
+    Pending-buffer entries are ``(req, src, idx, head_stage, head_row)``:
+    ``(src, idx)`` reference the request's carry row in its last segment's
+    output batch, ``(head_stage, head_row)`` hold the exit head it last
+    declined — the logits the SLO layer force-completes from when the
+    budget runs out (None for segment 0, which has no head yet).
     """
 
     def __init__(self, model, *, slots=32, threshold=None, stage_costs=None,
-                 max_wait=None):
+                 max_wait=None, slo=None):
         if not model.stage_fns:
             raise ValueError(
                 'model has no stage-split plan (exported without exit '
@@ -141,6 +166,12 @@ class ContinuousBatchScheduler:
         self.n_segs = model.n_stages
         if stage_costs is not None and len(stage_costs) != self.n_segs:
             raise ValueError(f'stage_costs must have {self.n_segs} entries')
+        self.slo = slo
+        if slo is not None and slo.stage_costs is None:
+            if stage_costs is not None:
+                slo.seed(stage_costs)
+            else:
+                slo.stage_costs = [None] * self.n_segs   # learn online
         self._clock = _Clock(stage_costs)
 
     # ---- scheduling policy: deepest full batch first, wait to fill when
@@ -163,62 +194,137 @@ class ContinuousBatchScheduler:
                 return k                      # drain
         return None
 
+    # --------------------------------------------------------- completions
+
+    def _complete(self, req, logits_row, stage, now, completions, metrics,
+                  degraded=False):
+        c = Completion(rid=req.rid, logits=logits_row,
+                       pred=int(logits_row.argmax()), exit_stage=stage,
+                       t_arrival=req.t_arrival, t_done=now,
+                       t_start=req.t_start, deadline=req.deadline,
+                       degraded=degraded)
+        completions[req.rid] = c
+        metrics.record_completion(c)
+
+    def _land(self, k, items, out, now, pend, completions, metrics):
+        """Process segment ``k``'s output: complete confident exits,
+        promote survivors (carry reference + their declined head's logits)
+        to ``pend[k + 1]``.  Shared with the replica pool, which lands
+        flights asynchronously."""
+        if k < self.n_segs - 1:
+            exits, carry = out
+            s = self.model.stage_exits[k]
+            conf = np.asarray(exit_confidence(exits[s]))
+            head = np.asarray(exits[s], np.float32)
+            for i, (req, *_) in enumerate(items):
+                if conf[i] > self.threshold:
+                    self._complete(req, head[i], s, now, completions,
+                                   metrics)
+                else:                         # compact: reference the row
+                    pend[k + 1].append((req, carry, i, s, head[i]))
+        else:
+            logits = np.asarray(out, np.float32)
+            for i, (req, *_) in enumerate(items):
+                self._complete(req, logits[i], -1, now, completions,
+                               metrics)
+
     def _run_segment(self, k, pend, completions, metrics, now):
         items = [pend[k].popleft()
                  for _ in range(min(len(pend[k]), self.slots))]
-        batch = _gather_rows([(src, idx) for _, src, idx in items],
+        if k == 0:
+            for req, *_ in items:
+                req.t_start = now             # service starts; wait ends
+        batch = _gather_rows([(src, idx) for _, src, idx, *_ in items],
                              self.slots)
         out = []
 
         def execute():
             out.append(jax.block_until_ready(
                 self.model.run_stage(k, batch)))
-        now += self._clock.charge(k, execute)
+        cost = self._clock.charge(k, execute)
+        now += cost
+        if self.slo is not None:
+            self.slo.observe(k, cost)
         metrics.record_batch(k, len(items), self.slots)
-
-        if k < self.n_segs - 1:
-            exits, carry = out[0]
-            s = self.model.stage_exits[k]
-            conf = np.asarray(exit_confidence(exits[s]))
-            head = np.asarray(exits[s], np.float32)
-            for i, (req, _, _) in enumerate(items):
-                if conf[i] > self.threshold:
-                    c = Completion(rid=req.rid, logits=head[i],
-                                   pred=int(head[i].argmax()), exit_stage=s,
-                                   t_arrival=req.t_arrival, t_done=now)
-                    completions[req.rid] = c
-                    metrics.record_completion(c)
-                else:                         # compact: reference the row
-                    pend[k + 1].append((req, carry, i))
-        else:
-            logits = np.asarray(out[0], np.float32)
-            for i, (req, _, _) in enumerate(items):
-                c = Completion(rid=req.rid, logits=logits[i],
-                               pred=int(logits[i].argmax()), exit_stage=-1,
-                               t_arrival=req.t_arrival, t_done=now)
-                completions[req.rid] = c
-                metrics.record_completion(c)
+        self._land(k, items, out[0], now, pend, completions, metrics)
         return now
+
+    # ------------------------------------------------------------ SLO hooks
+
+    def _admit(self, r, now, pend, metrics) -> bool:
+        if self.slo is None or r.deadline is None:
+            return True
+        if self.slo.admit(r.deadline, now, len(pend[0]), self.slots):
+            return True
+        self.slo.n_rejected += 1
+        metrics.record_rejection(r.rid, now, 'admission')
+        return False
+
+    def _slo_degrade(self, pend, k_star, now, completions, metrics):
+        """Before charging segment ``k_star`` (cost ``c``): any pending
+        deadline that cannot survive the charge is resolved NOW — degraded
+        to its stored head logits (segments >= 1), or rejected (segment 0,
+        no head yet; admission margins make this rare).  Runs at ``now``,
+        before time advances, so the resolution itself is never late."""
+        c = self.slo._cost(k_star)
+        for j, buf in enumerate(pend):
+            kept, pos = deque(), 0
+            for item in buf:
+                req = item[0]
+                if req.deadline is None:
+                    kept.append(item)
+                    pos += 1
+                    continue
+                in_batch = j == k_star and pos < self.slots
+                if self.slo.affordable(req.deadline, now, j, c, in_batch):
+                    kept.append(item)
+                    pos += 1
+                elif j == 0:
+                    self.slo.n_rejected += 1
+                    metrics.record_rejection(req.rid, now, 'missed')
+                else:
+                    self.slo.n_degraded += 1
+                    self._complete(req, item[4], item[3], now, completions,
+                                   metrics, degraded=True)
+            buf.clear()
+            buf.extend(kept)
 
     def run_trace(self, requests):
         """Serve a whole arrival trace; returns ``({rid: Completion},
         ServingMetrics)``.  Terminates exactly when every request has
-        completed (the queue and every stage buffer drained)."""
+        completed or been rejected (the queue and every stage buffer
+        drained)."""
         queue = RequestQueue(requests)
         pend = [deque() for _ in range(self.n_segs)]
         completions, metrics = {}, ServingMetrics()
         now = queue.next_arrival() or 0.0
         while queue or any(pend):
             for r in queue.pop_ready(now, self.slots - len(pend[0])):
-                pend[0].append((r, r.x, None))
+                if self._admit(r, now, pend, metrics):
+                    pend[0].append((r, r.x, None, None, None))
             k = self._pick(pend, more_arrivals=bool(queue), now=now)
+            if self.slo is not None:
+                urgent = self.slo.urgent_segment(pend, now)
+                if urgent is not None:
+                    k = urgent                # deadline overrides fill
             if k is None:
-                nxt = queue.next_arrival()
+                horizons = [t for t in (queue.next_arrival(),)
+                            if t is not None]
                 if self.max_wait is not None and any(pend):
                     oldest = min(p[0][0].t_arrival for p in pend if p)
-                    nxt = min(nxt, oldest + self.max_wait)
-                now = max(now, nxt)
+                    horizons.append(oldest + self.max_wait)
+                if self.slo is not None:
+                    wake = self.slo.wake(pend, now)
+                    if wake is not None:
+                        horizons.append(wake)
+                if not horizons:   # everything left was rejected this round
+                    continue
+                now = max(now, min(horizons))
                 continue
+            if self.slo is not None:
+                self._slo_degrade(pend, k, now, completions, metrics)
+                if not pend[k]:               # the sweep emptied the batch
+                    continue
             now = self._run_segment(k, pend, completions, metrics, now)
         return completions, metrics
 
@@ -251,6 +357,8 @@ class StaticBatchScheduler:
             while len(ready) < self.slots and queue:   # wait to fill
                 now = max(now, queue.next_arrival())
                 ready += queue.pop_ready(now, self.slots - len(ready))
+            for req in ready:
+                req.t_start = now
             batch = _gather_rows([(r.x, None) for r in ready], self.slots)
             out = []
 
@@ -265,7 +373,8 @@ class StaticBatchScheduler:
                 c = Completion(rid=req.rid, logits=ans[i],
                                pred=int(ans[i].argmax()),
                                exit_stage=int(stage[i]),
-                               t_arrival=req.t_arrival, t_done=now)
+                               t_arrival=req.t_arrival, t_done=now,
+                               t_start=req.t_start, deadline=req.deadline)
                 completions[req.rid] = c
                 metrics.record_completion(c)
         return completions, metrics

@@ -46,6 +46,30 @@ def test_checkpoint_manager_gc_and_async(tmp_path):
     assert step == 4 and float(out['x'][0]) == 4
 
 
+def test_restore_latest_falls_back_past_corruption(tmp_path):
+    """A committed step that rots after the rename (truncated manifest or
+    npz) must not kill the restore: restore_latest walks back to the most
+    recent readable step, and raises FileNotFoundError only when every
+    committed step is corrupt."""
+    mgr = CheckpointManager(str(tmp_path), keep=3, async_save=False)
+    for s in range(3):
+        mgr.save(s, {'x': jnp.full((3,), s)})
+    # truncate the newest step's manifest mid-file
+    with open(tmp_path / 'step_00000002' / 'manifest.json', 'r+') as f:
+        f.truncate(10)
+    out, step = mgr.restore_latest({'x': jnp.zeros((3,))})
+    assert step == 1 and float(out['x'][0]) == 1
+    # rot the npz of step 1 too — fall back two steps
+    with open(tmp_path / 'step_00000001' / 'proc_0.npz', 'w') as f:
+        f.write('not a zip')
+    out, step = mgr.restore_latest({'x': jnp.zeros((3,))})
+    assert step == 0 and float(out['x'][0]) == 0
+    # every committed step corrupt -> FileNotFoundError, not a crash
+    os.remove(tmp_path / 'step_00000000' / 'manifest.json')
+    with pytest.raises(FileNotFoundError, match='all corrupt'):
+        mgr.restore_latest({'x': jnp.zeros((3,))})
+
+
 def test_fault_tolerant_loop_recovers(tmp_path):
     """Inject failures at fixed steps; the loop must restore and finish with
     the same final state a failure-free run produces (determinism)."""

@@ -1,0 +1,338 @@
+"""Resilience-layer tests: SLO admission/degradation (never silently
+late), the replica pool under chaos (kill mid-batch, straggler slowdown,
+elastic scaling) with every completion bit-exact vs an undisturbed run,
+checkpoint-backed failover through the registry, and the property sweep
+pinning scheduler-side exit decisions to core/export.early_exit_batch."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.cnn import RESNET8_CIFAR
+from repro.core.export import (calibrate_exit_threshold, early_exit_batch,
+                               export_cnn)
+from repro.core.family import CNNFamily
+from repro.data import SyntheticImages
+from repro.serving import (ChaosPlan, ContinuousBatchScheduler,
+                           ModelRegistry, ReplicaPoolScheduler, Request,
+                           RequestQueue, SLOPolicy, exit_decisions)
+
+SLOTS = 8
+COSTS = [4e-3, 2e-3, 1e-3]                # simulated per-segment batch costs
+
+
+@pytest.fixture(scope='module')
+def family():
+    return CNNFamily(SyntheticImages())
+
+
+@pytest.fixture(scope='module')
+def exported(family):
+    base = RESNET8_CIFAR
+    params = family.init(jax.random.key(0), base)
+    params, cfg = family.add_exits(jax.random.key(2), params, base,
+                                   family.default_exit_points(base))
+    cfg = cfg.replace(w_bits=8, a_bits=8)
+    calib = jax.random.normal(jax.random.key(3), (SLOTS, 32, 32, 3))
+    model = export_cnn(params, cfg, calibrate=calib)
+    return model, calibrate_exit_threshold(model, calib)
+
+
+def _trace(n, rate=2000.0, seed=0, deadlines=None):
+    xs = jax.random.normal(jax.random.key(11), (max(n, 1), 32, 32, 3))
+    rng = np.random.default_rng(seed)
+    t = np.cumsum(rng.exponential(1.0 / rate, size=n))
+    return [Request(i, xs[i], float(t[i]),
+                    deadline=(None if deadlines is None
+                              else float(t[i] + deadlines[i])))
+            for i in range(n)]
+
+
+# ------------------------------------------------------------- SLO policy
+
+
+def test_slo_policy_decisions():
+    slo = SLOPolicy()
+    assert slo.admit(deadline=0.0, now=0.0, backlog=99,
+                     slots=8)                          # no costs: admit all
+    slo.seed(COSTS)
+    assert slo.max_cost == 4e-3
+    # empty backlog: need one seg-0 batch + one head-of-line blocking exec
+    assert slo.admit(now=0.0, deadline=8e-3, backlog=0, slots=8)
+    assert not slo.admit(now=0.0, deadline=7.9e-3, backlog=0, slots=8)
+    # 8 queued ahead at 8 slots -> two seg-0 batches before service
+    assert not slo.admit(now=0.0, deadline=10e-3, backlog=8, slots=8)
+    assert slo.admit(now=0.0, deadline=12e-3, backlog=8, slots=8)
+    assert slo.latest_start(1, deadline=10e-3) == pytest.approx(8e-3)
+    # in the charged batch: answers at now + charge
+    assert slo.affordable(5e-3, now=1e-3, k=1, charge=4e-3, in_batch=True)
+    # not in it: must fit its own segment after the charge
+    assert not slo.affordable(5e-3, now=1e-3, k=1, charge=4e-3,
+                              in_batch=False)
+    slo2 = SLOPolicy(slack=2.0)
+    slo2.seed(COSTS)
+    assert slo2._cost(0) == pytest.approx(8e-3)   # slack scales estimates
+    slo3 = SLOPolicy(stage_costs=[None, None])
+    slo3.observe(0, 4e-3)
+    assert slo3._cost(0) == pytest.approx(4e-3)   # learned online
+    slo3.observe(0, 8e-3)
+    assert 4e-3 < slo3._cost(0) < 8e-3            # EWMA blend
+
+
+def test_request_queue_requeue_fifo():
+    q = RequestQueue([Request(i, None, float(i)) for i in range(4)])
+    got = q.pop_ready(10.0, 2)
+    assert [r.rid for r in got] == [0, 1]
+    # failover replay: rid 1 re-enters AT its original arrival position,
+    # ahead of later arrivals still queued
+    q.requeue(got[1])
+    assert [r.rid for r in q.pop_ready(10.0, 3)] == [1, 2, 3]
+    # a fresh push must stay in arrival order; replay must use requeue()
+    q.push(Request(9, None, 9.0))
+    with pytest.raises(ValueError, match='requeue'):
+        q.push(Request(10, None, 1.0))
+    q.requeue(Request(10, None, 1.0))
+    assert [r.rid for r in q.pop_ready(10.0, 2)] == [10, 9]
+
+
+# ------------------------------------------ SLO on the single scheduler
+
+
+def test_slo_rejects_hopeless_admission(exported):
+    model, thr = exported
+    # budget below one seg-0 batch + head-of-line blocking: unservable
+    reqs = _trace(SLOTS, deadlines=[1e-3] * SLOTS)
+    comp, met = ContinuousBatchScheduler(
+        model, slots=SLOTS, threshold=thr, stage_costs=COSTS,
+        slo=SLOPolicy()).run_trace(reqs)
+    assert comp == {}
+    s = met.summary()
+    assert s['n_rejected'] == SLOTS
+    assert s['availability'] == 0.0
+    assert s['slo'] == {'n_with_deadline': SLOTS, 'n_on_time': 0,
+                        'n_late': 0, 'attainment': 0.0}
+    assert all(reason == 'admission' for _, _, reason in met.rejections)
+
+
+def test_slo_degrades_to_exit_head_never_late(exported):
+    model, _ = exported
+    # threshold 2.0: nobody exits voluntarily — every completion wants
+    # full depth.  A near-simultaneous burst of 3 full batches with one
+    # shared budget creates contention: the first batch affords full
+    # depth, a later batch's budget runs out mid-service (degraded at an
+    # exit head, on time), and the tail can't even cover admission
+    # (rejected).  Nobody is ever late.
+    n = 3 * SLOTS
+    budget = 2 * COSTS[0] + COSTS[1] + COSTS[2] + 2e-3
+    reqs = _trace(n, rate=50000.0, deadlines=[budget] * n)
+    comp, met = ContinuousBatchScheduler(
+        model, slots=SLOTS, threshold=2.0, stage_costs=COSTS,
+        slo=SLOPolicy()).run_trace(reqs)
+    s = met.summary()
+    assert len(comp) + s['n_rejected'] == n, 'requests lost'
+    assert s['n_degraded'] >= 1, 'contention must force a degrade'
+    assert s['n_rejected'] >= 1, 'the tail must be rejected at admission'
+    assert s['slo']['n_late'] == 0
+    assert sum(s['degraded_exit_mix'].values()) == s['n_degraded']
+    for r in reqs:
+        if r.rid not in comp:
+            continue
+        c = comp[r.rid]
+        assert c.on_time, f'request {r.rid} completed late'
+        if not c.degraded:
+            continue
+        assert c.exit_stage >= 0
+        # degraded logits are the head's own row — bit-exact, only the
+        # exit DECISION was forced
+        xb = jnp.concatenate([r.x[None], jnp.zeros((SLOTS - 1,) + r.x.shape,
+                                                   r.x.dtype)])
+        _, exits = model.fn_exits(model.params, xb)
+        np.testing.assert_array_equal(
+            c.logits, np.asarray(exits[c.exit_stage], np.float32)[0])
+
+
+def test_slo_never_late_random_budgets(exported):
+    """The acceptance bar: with deadlines enabled, NO admitted request
+    completes past its deadline on the simulated clock — every deadline
+    request is on time (possibly degraded) or rejected at admission."""
+    model, thr = exported
+    rng = np.random.default_rng(42)
+    n = 4 * SLOTS
+    budgets = rng.uniform(0.3, 3.0, size=n) * sum(COSTS)
+    reqs = _trace(n, rate=1500.0, deadlines=budgets)
+    comp, met = ContinuousBatchScheduler(
+        model, slots=SLOTS, threshold=thr, stage_costs=COSTS,
+        slo=SLOPolicy()).run_trace(reqs)
+    s = met.summary()
+    assert len(comp) + s['n_rejected'] == n, 'requests lost'
+    assert s['slo']['n_late'] == 0
+    assert s['slo']['n_on_time'] == len(comp)
+    assert all(c.on_time for c in comp.values())
+
+
+# ------------------------------------------------------- replica pool
+
+
+def test_pool_requires_stage_costs(exported):
+    model, thr = exported
+    with pytest.raises(ValueError, match='stage_costs'):
+        ReplicaPoolScheduler(model, slots=SLOTS, threshold=thr)
+
+
+def test_pool_matches_single_executor_bit_exact(exported):
+    model, thr = exported
+    reqs = _trace(3 * SLOTS + 3)
+    single, _ = ContinuousBatchScheduler(
+        model, slots=SLOTS, threshold=thr,
+        stage_costs=COSTS).run_trace(reqs)
+    pooled, met = ReplicaPoolScheduler(
+        model, slots=SLOTS, threshold=thr, stage_costs=COSTS,
+        replicas=3, min_replicas=3).run_trace(reqs)
+    assert len(pooled) == len(reqs)
+    for r in reqs:
+        assert pooled[r.rid].exit_stage == single[r.rid].exit_stage
+        np.testing.assert_array_equal(pooled[r.rid].logits,
+                                      single[r.rid].logits)
+
+
+def test_pool_chaos_kill_requeues_and_restores(exported, family, tmp_path):
+    """A replica killed mid-batch loses nothing: its in-flight requests
+    requeue, a replacement restores from the chain checkpoint through the
+    registry, and every completion stays bit-exact vs the undisturbed
+    pool."""
+    from repro.checkpoint import save_chain_state
+    from repro.core.passes import ChainState
+
+    model, thr = exported
+    # persist the ORIGINAL float params the export was built from
+    base = RESNET8_CIFAR
+    params = family.init(jax.random.key(0), base)
+    params, cfg = family.add_exits(jax.random.key(2), params, base,
+                                   family.default_exit_points(base))
+    st = ChainState(family=family, cfg=cfg.replace(w_bits=8, a_bits=8),
+                    params=params, key=jax.random.key(7),
+                    exit_threshold=thr)
+    save_chain_state(str(tmp_path), st, step=0)
+    reg = ModelRegistry()
+    calib = jax.random.normal(jax.random.key(3), (SLOTS, 32, 32, 3))
+    served = reg.load('m', str(tmp_path), family, calibrate=calib)
+    restores = []
+
+    def restore():
+        restores.append(1)
+        return reg.restore('m')
+
+    reqs = _trace(3 * SLOTS, rate=4000.0)
+    kw = dict(slots=SLOTS, threshold=thr, stage_costs=COSTS, replicas=2,
+              min_replicas=2)
+    undisturbed, _ = ReplicaPoolScheduler(served, **kw).run_trace(reqs)
+    # first seg-0 batch dispatches once 8 requests arrived (~2ms at
+    # rate 4000) and flies for COSTS[0]=4ms: t=4ms is mid-batch
+    plan = ChaosPlan(kills=((4e-3, 0),))
+    comp, met = ReplicaPoolScheduler(
+        served, chaos=plan, restore=restore,
+        restore_delay=COSTS[0], **kw).run_trace(reqs)
+    assert len(comp) == len(reqs), 'kill lost requests'
+    kills = [(k, i) for k, _, i in met.events if k == 'kill']
+    assert kills and kills[0][1]['mid_batch'], 'kill must land mid-batch'
+    assert met.summary()['resilience']['failovers'] == 1
+    assert restores == [1], 'failover must restore through the registry'
+    for r in reqs:
+        assert comp[r.rid].exit_stage == undisturbed[r.rid].exit_stage
+        np.testing.assert_array_equal(comp[r.rid].logits,
+                                      undisturbed[r.rid].logits)
+
+
+def test_pool_straggler_flagged_and_evicted(exported):
+    model, thr = exported
+    reqs = _trace(6 * SLOTS, rate=50000.0)     # near-simultaneous arrivals
+    # pin the pool to exactly 2 replicas: elastic scale-up would dilute the
+    # slowed replica's share of batches and starve the consecutive-flag
+    # eviction counter
+    kw = dict(slots=SLOTS, threshold=thr, stage_costs=COSTS, replicas=2,
+              min_replicas=2, max_replicas=2)
+    undisturbed, _ = ReplicaPoolScheduler(model, **kw).run_trace(reqs)
+    plan = ChaosPlan(slowdowns=((0.0, 0, 2.5),))
+    comp, met = ReplicaPoolScheduler(
+        model, chaos=plan, evict_after=2, **kw).run_trace(reqs)
+    assert len(comp) == len(reqs)
+    res = met.summary()['resilience']
+    assert res['straggler_flags'] >= 1, 'slowdown never flagged'
+    assert res['evictions'] >= 1, 'persistent straggler never evicted'
+    flagged = {i['replica'] for k, _, i in met.events
+               if k == 'straggler_flag'}
+    assert flagged == {0}, 'only the slowed replica may be flagged'
+    for r in reqs:
+        assert comp[r.rid].exit_stage == undisturbed[r.rid].exit_stage
+        np.testing.assert_array_equal(comp[r.rid].logits,
+                                      undisturbed[r.rid].logits)
+
+
+def test_pool_elastic_scaling(exported):
+    model, thr = exported
+    reqs = _trace(4 * SLOTS, rate=50000.0)     # a burst: deep backlog
+    elastic, e_met = ReplicaPoolScheduler(
+        model, slots=SLOTS, threshold=thr, stage_costs=COSTS,
+        replicas=1, max_replicas=4).run_trace(reqs)
+    fixed, f_met = ReplicaPoolScheduler(
+        model, slots=SLOTS, threshold=thr, stage_costs=COSTS,
+        replicas=1, max_replicas=1).run_trace(reqs)
+    assert len(elastic) == len(fixed) == len(reqs)
+    res = e_met.summary()['resilience']
+    assert res['scale_ups'] >= 1
+    assert res['peak_replicas'] >= 2
+    assert f_met.summary()['resilience']['peak_replicas'] == 1
+    # scaling from queue depth must actually shorten the makespan
+    assert max(c.t_done for c in elastic.values()) < \
+        max(c.t_done for c in fixed.values())
+
+
+def test_pool_slo_never_late_under_chaos(exported):
+    model, thr = exported
+    rng = np.random.default_rng(7)
+    n = 4 * SLOTS
+    budgets = rng.uniform(0.4, 4.0, size=n) * sum(COSTS)
+    reqs = _trace(n, rate=4000.0, deadlines=budgets)
+    plan = ChaosPlan(kills=((5e-3, None),), slowdowns=((0.0, 1, 2.0),))
+    comp, met = ReplicaPoolScheduler(
+        model, slots=SLOTS, threshold=thr, stage_costs=COSTS, replicas=2,
+        min_replicas=2, slo=SLOPolicy(), chaos=plan).run_trace(reqs)
+    s = met.summary()
+    assert len(comp) + s['n_rejected'] == n, 'requests lost under chaos'
+    assert s['slo']['n_late'] == 0
+    assert all(c.on_time for c in comp.values())
+
+
+# --------------------------------------------- decision-rule equivalence
+
+
+def test_exit_decisions_matches_early_exit_batch_property():
+    """Seeded random sweep: the scheduler-side exit_decisions and the
+    export-side early_exit_batch must pick the identical (exit stage,
+    answering head) on arbitrary logits — one decision rule, no drift.
+    Includes thresholds equal to an exact confidence value (strict >)."""
+    rng = np.random.default_rng(1234)
+    for trial in range(50):
+        b = int(rng.integers(1, 17))
+        c = int(rng.integers(2, 11))
+        stages = sorted(rng.choice(8, size=int(rng.integers(1, 4)),
+                                   replace=False).tolist())
+        logits = jnp.asarray(rng.normal(size=(b, c)) * rng.uniform(0.5, 4))
+        exits = {int(s): jnp.asarray(rng.normal(size=(b, c))
+                                     * rng.uniform(0.5, 4))
+                 for s in stages}
+        if trial % 5 == 0:
+            # threshold exactly AT a head's confidence: strictly-greater
+            # means that sample must NOT exit there, in both rules
+            from repro.core.export import exit_confidence
+            s0 = stages[0]
+            threshold = float(np.asarray(
+                exit_confidence(exits[s0]))[int(rng.integers(b))])
+        else:
+            threshold = float(rng.uniform(0.1, 1.0))
+        stage_sched, ans = exit_decisions(logits, exits, threshold)
+        pred_core, stage_core = early_exit_batch(logits, exits, threshold)
+        np.testing.assert_array_equal(stage_sched,
+                                      np.asarray(stage_core, np.int64))
+        np.testing.assert_array_equal(ans.argmax(-1),
+                                      np.asarray(pred_core))
