@@ -21,9 +21,17 @@ export's bit-exactness contract; --oracle-all checks every request,
 otherwise a sample).
 
 Results go to BENCH_load.json (backend, batch geometry, median timings,
-per-scheduler latency/throughput/occupancy).  ``--smoke`` is the CI
-wiring: a tiny trace, asserts the scheduler drains the queue and answers
-match the oracle, writes nothing unless --out is given.
+per-scheduler latency/throughput/occupancy, plus a windowed ``timeseries``
+block per scheduler — queue depth, rolling p99, occupancy over the run —
+that ``benchmarks/summarize.py --diff-bench`` compares across
+generations).  ``--smoke`` is the CI wiring: a tiny trace, asserts the
+scheduler drains the queue and answers match the oracle, writes nothing
+unless --out is given.
+
+``--trace out.json`` records the run (the compacting scheduler, or the
+chaos-on pool run under --chaos) as Chrome-trace JSON, validates its span
+invariants strictly (``repro.obs.check_trace`` — including a round-trip
+through the written file), and prints a one-line telemetry digest.
 
 ``--chaos`` switches to the resilience benchmark over the replica pool
 (repro/serving/replica.py): the model is served from a persisted chain
@@ -112,6 +120,29 @@ def check_oracle(model, completions, reqs, threshold, slots):
     return bad
 
 
+def validate_and_write_trace(tracer, completions, path, *,
+                             require_failover=False):
+    """Strict invariant check on the recorded spans, write the Chrome
+    trace, and re-validate what was actually written (round-trip through
+    the exporter/parser).  ``require_failover`` additionally asserts the
+    chaos story is visible: a killed ``stage.exec`` on the dead replica's
+    track and a ``failover.restore`` span on the replacement's."""
+    from repro.obs import check_trace, load_chrome_trace
+    check_trace(tracer, completions, strict=True)
+    if require_failover:
+        killed = [s for s in tracer.spans
+                  if s.name == 'stage.exec' and s.args.get('killed')]
+        restores = [s for s in tracer.spans
+                    if s.name == 'failover.restore']
+        assert killed, 'chaos trace has no killed stage.exec span'
+        assert restores, 'chaos trace has no failover.restore span'
+        assert all(s.track.startswith('replica') for s in killed + restores)
+    tracer.write(path)
+    check_trace(load_chrome_trace(path), completions, strict=True)
+    print(f'  trace: {len(tracer.spans)} spans -> {path} '
+          f'(validated, open at https://ui.perfetto.dev)')
+
+
 def run_chaos(args, fam, cfg, params, xs, calib, threshold, stage_costs_us,
               slots, use_pallas, out):
     """The --chaos path: three replica-pool runs on one bursty trace.
@@ -164,8 +195,12 @@ def run_chaos(args, fam, cfg, params, xs, calib, threshold, stage_costs_us,
     makespan = max(c.t_done for c in base_comp.values())
     plan = ChaosPlan.seeded(args.chaos_seed, args.replicas, makespan)
 
+    tracer = None
+    if args.trace:
+        from repro.obs import Tracer
+        tracer = Tracer()
     chaos_comp, chaos_met = ReplicaPoolScheduler(
-        model, chaos=plan, **pool_kw).run_trace(trace)
+        model, chaos=plan, tracer=tracer, **pool_kw).run_trace(trace)
     b_sum, c_sum = base_met.summary(), chaos_met.summary()
     res = c_sum['resilience']
     assert len(chaos_comp) == len(trace), 'chaos run lost requests'
@@ -192,6 +227,9 @@ def run_chaos(args, fam, cfg, params, xs, calib, threshold, stage_costs_us,
     slo_comp, slo_met = ReplicaPoolScheduler(
         model, chaos=plan, slo=SLOPolicy(), **pool_kw).run_trace(slo_trace)
     s_sum = slo_met.summary()
+    b_sum['timeseries'] = base_met.timeseries()
+    c_sum['timeseries'] = chaos_met.timeseries()
+    s_sum['timeseries'] = slo_met.timeseries()
     assert s_sum['slo']['n_late'] == 0, 'never-late contract violated'
     for c in slo_comp.values():
         if not c.degraded:
@@ -244,6 +282,10 @@ def run_chaos(args, fam, cfg, params, xs, calib, threshold, stage_costs_us,
           f"degraded={s_sum['n_degraded']} "
           f"rejected={s_sum['n_rejected']} "
           f"degraded_mix={s_sum['degraded_exit_mix']}")
+    print('  ' + chaos_met.telemetry_digest())
+    if tracer is not None:
+        validate_and_write_trace(tracer, chaos_comp, args.trace,
+                                 require_failover=True)
     if args.smoke:
         print('chaos smoke OK: zero lost, bit-exact under kill+straggler, '
               'no late completion')
@@ -293,6 +335,10 @@ def main():
                     help='--chaos: initial replica count')
     ap.add_argument('--max-replicas', type=int, default=4,
                     help='--chaos: elastic scaling ceiling')
+    ap.add_argument('--trace', default=None, metavar='OUT.json',
+                    help='record the run (compacting scheduler, or the '
+                         'chaos-on pool run under --chaos) as Chrome-trace '
+                         'JSON, strictly validated via repro.obs')
     ap.add_argument('--out', default=None)
     args = ap.parse_args()
     if args.smoke:
@@ -354,9 +400,13 @@ def main():
     static = StaticBatchScheduler(model, slots=slots, threshold=threshold,
                                   batch_cost=mono_us * 1e-6)
     s_comp, s_met = static.run_trace(trace)
+    tracer = None
+    if args.trace:
+        from repro.obs import Tracer
+        tracer = Tracer()
     compacting = ContinuousBatchScheduler(
         model, slots=slots, threshold=threshold,
-        stage_costs=[c * 1e-6 for c in stage_costs_us])
+        stage_costs=[c * 1e-6 for c in stage_costs_us], tracer=tracer)
     c_comp, c_met = compacting.run_trace(trace)
 
     assert len(s_comp) == len(c_comp) == args.requests, \
@@ -372,6 +422,8 @@ def main():
     assert agree, 'static and compacting schedulers disagree on answers'
 
     s_sum, c_sum = s_met.summary(), c_met.summary()
+    s_sum['timeseries'] = s_met.timeseries()
+    c_sum['timeseries'] = c_met.timeseries()
     results = {
         'backend': jax.default_backend(),
         'int8_path': 'pallas' if use_pallas else 'jnp-ref',
@@ -405,6 +457,9 @@ def main():
           f"occupancy={c_sum['batch_occupancy']}")
     print(f"  compaction: {results['compaction_throughput_x']:.2f}x "
           f"throughput, {results['compaction_p99_x']:.2f}x p99")
+    print('  ' + c_met.telemetry_digest())
+    if tracer is not None:
+        validate_and_write_trace(tracer, c_comp, args.trace)
     if args.smoke:
         print('smoke OK: queue drained, answers bit-exact vs oracle')
 

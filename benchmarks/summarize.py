@@ -2,11 +2,21 @@
 
 Usage: PYTHONPATH=src python -m benchmarks.summarize
 Writes experiments/summary.md (pasted into EXPERIMENTS.md).
+
+``--diff-bench`` instead compares the serving telemetry time-series
+(the ``timeseries`` blocks benchmarks/serving_load.py records into
+BENCH_load.json / BENCH_chaos.json) against the previous committed
+generation (``git show HEAD:<file>``): worst-window p99, peak queue
+depth, and occupancy, flagging regressions past --tolerance.  Purely
+informational on a noisy box — it prints REGRESSION markers but exits
+zero unless --strict is given.
 """
 from __future__ import annotations
 
+import argparse
 import json
 import os
+import subprocess
 
 PAPER = 'experiments/paper'
 DRY = 'experiments/dryrun/pod'
@@ -36,7 +46,88 @@ def _cell(tagged):
             'coll_s': coll / 50e9}
 
 
+#: BENCH file -> scheduler-summary keys carrying a ``timeseries`` block
+BENCH_TS = {
+    'BENCH_load.json': ('static', 'compacting'),
+    'BENCH_chaos.json': ('chaos_off', 'chaos_on', 'chaos_slo'),
+}
+
+
+def _ts_stats(block):
+    """The three comparable scalars of one scheduler's timeseries block:
+    (worst-window p99 s, peak queue depth, mean occupancy)."""
+    ts = block.get('timeseries') or {}
+    if not ts:
+        return None
+    p99 = (ts.get('worst_p99_window') or {}).get('p99_s')
+    q = (ts.get('queue_depth') or {}).get('overall_peak')
+    occ = [v for v in (ts.get('occupancy') or []) if v is not None]
+    occ_mean = (sum(occ) / len(occ)) if occ else None
+    return {'worst_p99_s': p99, 'peak_queue': q, 'mean_occupancy': occ_mean}
+
+
+def diff_bench(tolerance=0.10, strict=False):
+    """Diff current BENCH timeseries blocks vs the HEAD generation."""
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    n_reg = 0
+    for fname, keys in BENCH_TS.items():
+        path = os.path.join(root, fname)
+        if not os.path.exists(path):
+            print(f'{fname}: not present, skipped')
+            continue
+        with open(path) as f:
+            new = json.load(f)
+        try:
+            old = json.loads(subprocess.run(
+                ['git', 'show', f'HEAD:{fname}'], cwd=root, check=True,
+                capture_output=True, text=True).stdout)
+        except (subprocess.CalledProcessError, json.JSONDecodeError):
+            old = None
+        print(f'{fname}:')
+        for key in keys:
+            cur = _ts_stats(new.get(key, {}))
+            if cur is None:
+                print(f'  {key}: no timeseries block in current run')
+                continue
+            prev = _ts_stats((old or {}).get(key, {}))
+            if prev is None:
+                print(f'  {key}: no previous-generation timeseries '
+                      '(baseline recorded): '
+                      + ' '.join(f'{k}={v}' for k, v in cur.items()))
+                continue
+            for metric, worse_is in (('worst_p99_s', 'higher'),
+                                     ('peak_queue', 'higher'),
+                                     ('mean_occupancy', 'lower')):
+                a, b = prev[metric], cur[metric]
+                if a is None or b is None or a == 0:
+                    continue
+                ratio = b / a
+                regressed = (ratio > 1 + tolerance if worse_is == 'higher'
+                             else ratio < 1 - tolerance)
+                tag = '  REGRESSION' if regressed else ''
+                n_reg += regressed
+                print(f'  {key}.{metric}: {a:.6g} -> {b:.6g} '
+                      f'({ratio:.2f}x){tag}')
+    if n_reg:
+        print(f'{n_reg} telemetry regression(s) past '
+              f'{tolerance:.0%} tolerance')
+        if strict:
+            raise SystemExit(1)
+    else:
+        print('no telemetry regressions')
+
+
 def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument('--diff-bench', action='store_true',
+                    help='diff BENCH_*.json timeseries vs the HEAD '
+                         'generation instead of building summary.md')
+    ap.add_argument('--tolerance', type=float, default=0.10)
+    ap.add_argument('--strict', action='store_true',
+                    help='--diff-bench exits non-zero on regression')
+    args = ap.parse_args()
+    if args.diff_bench:
+        return diff_bench(tolerance=args.tolerance, strict=args.strict)
     out = []
     pw = _load('pairwise_order.json')
     if pw:

@@ -47,6 +47,35 @@ python benchmarks/serving_load.py --smoke
 # request ever finishes past its deadline.  Writes no BENCH file.
 python benchmarks/serving_load.py --smoke --chaos
 
+# trace smoke: the chaos smoke again with --trace — the run must emit a
+# valid Chrome-trace JSON whose spans pass the strict invariant check
+# (nesting, per-replica serial execution, latency == span extent) with
+# the kill + failover story visible on the replica tracks; then the
+# validator itself is proven live by mutating a span (tearing t1 < t0)
+# and requiring check_trace to go red on the mutated file.
+python benchmarks/serving_load.py --smoke --chaos \
+    --trace /tmp/trace_smoke.json
+python - <<'PY'
+import json
+from repro.obs import check_trace, load_chrome_trace
+
+spans = load_chrome_trace('/tmp/trace_smoke.json')
+assert not check_trace(spans, strict=False), 'smoke trace has violations'
+assert any(s.name == 'stage.exec' and s.args.get('killed') for s in spans)
+assert any(s.name == 'failover.restore' for s in spans)
+
+with open('/tmp/trace_smoke.json') as f:
+    doc = json.load(f)
+for ev in doc['traceEvents']:          # tear one stage.exec span
+    if ev.get('ph') == 'X' and ev.get('name') == 'stage.exec':
+        ev['dur'] = -ev['dur'] - 1
+        break
+torn = check_trace(load_chrome_trace(doc), strict=False)
+assert torn, 'check_trace stayed green on a torn span'
+print(f'trace smoke OK: {len(spans)} spans valid, '
+      f'torn-span mutation caught ({len(torn)} violation(s))')
+PY
+
 # static-analysis gate (repro/analysis): every rule must be green on the
 # shipped exports of all three CNN kinds (both backends + the theoretical
 # sequence) AND red on its deliberately-mutated export — a rule that stops

@@ -112,6 +112,24 @@ def mutant_order_dag():
             'target': 'mutant:order-dag'}
 
 
+def mutant_trace_invariants():
+    """A runtime trace with a torn span (t1 < t0) and two stage.exec
+    spans claiming the same replica concurrently — the two ways a buggy
+    scheduler most plausibly corrupts its own evidence.  The
+    trace-invariants rule must flag both."""
+    from repro.obs.trace import Span
+    spans = [
+        Span('stage.exec', 0.000, 0.004, 'replica0',
+             args={'stage': 0, 'live': 8, 'slots': 8, 'rids': [0]}),
+        Span('stage.exec', 0.002, 0.006, 'replica0',          # concurrent
+             args={'stage': 1, 'live': 4, 'slots': 8, 'rids': [1]}),
+        Span('stage.exec', 0.010, 0.008, 'replica1',          # torn
+             args={'stage': 0, 'live': 8, 'slots': 8, 'rids': [2]}),
+    ]
+    return {'trace': spans, 'rules': ('trace-invariants',),
+            'target': 'mutant:trace-invariants'}
+
+
 def mutant_hlo_traffic():
     """A serving fn that silently runs the network twice (averaged over
     the input and its mirror — flip defeats CSE) under an unchanged plan:
@@ -136,4 +154,5 @@ MUTANTS = {
     'stage-carry': mutant_stage_carry,
     'order-dag': mutant_order_dag,
     'hlo-traffic': mutant_hlo_traffic,
+    'trace-invariants': mutant_trace_invariants,
 }

@@ -46,7 +46,8 @@ from repro.analysis.walker import (pallas_call_name, pallas_call_vmem_bytes,
 
 #: What a rule may declare in ``requires`` — :meth:`AnalysisContext.has`
 #: answers each against the target.
-KNOWN_REQUIRES = ('model', 'plan', 'pallas', 'stages', 'sequence', 'input')
+KNOWN_REQUIRES = ('model', 'plan', 'pallas', 'stages', 'sequence', 'input',
+                  'trace')
 
 #: hlo-traffic: measured bytes may exceed the prediction by this fraction
 #: before the rule errors (the ISSUE's ">20% regression" threshold).
@@ -140,9 +141,12 @@ class AnalysisContext:
     HLO compile is the expensive one (~1s on the CPU backend).
     """
 
-    def __init__(self, model=None, sequence=None, x=None):
+    def __init__(self, model=None, sequence=None, x=None, trace=None,
+                 completions=None):
         self.model = model
         self.sequence = sequence
+        self.trace = trace                # Tracer, span list, or trace path
+        self.completions = completions    # {rid: Completion} (optional)
         self._x = x
         self._jaxprs: dict[str, Any] = {}
         self._scale_delta: int | None = None
@@ -163,6 +167,8 @@ class AnalysisContext:
             return self.sequence is not None
         if req == 'input':
             return self.example_input() is not None
+        if req == 'trace':
+            return self.trace is not None
         raise ValueError(f'unknown requirement {req!r} '
                          f'(known: {KNOWN_REQUIRES})')
 
@@ -238,19 +244,25 @@ class AnalysisContext:
 
 
 def check(model=None, *, sequence=None, x=None, rules=None,
-          strict: bool = False, target: str = '') -> AnalysisReport:
+          strict: bool = False, target: str = '', trace=None,
+          completions=None) -> AnalysisReport:
     """Run every applicable registered rule over the target.
 
     ``model`` — a ServingModel (or anything shaped like one);
     ``sequence`` — a pass-key string or Pipeline for the order-dag rule;
     ``x`` — example input override (derived from the plan when omitted);
     ``rules`` — restrict to these keys (default: all registered);
-    ``strict`` — raise :class:`AnalysisError` on any error finding.
+    ``strict`` — raise :class:`AnalysisError` on any error finding;
+    ``trace`` — runtime evidence for the trace-invariants rule: a
+    ``repro.obs.Tracer``, a span list, or a Chrome-trace file path, with
+    ``completions`` (``{rid: Completion}``) enabling the latency-extent
+    checks.
 
     Rules whose requirements the target cannot satisfy are recorded under
     ``report.skipped`` with the unmet requirement — not silently dropped.
     """
-    ctx = AnalysisContext(model=model, sequence=sequence, x=x)
+    ctx = AnalysisContext(model=model, sequence=sequence, x=x, trace=trace,
+                          completions=completions)
     keys = tuple(rules) if rules is not None else registered_rules()
     findings, checked, skipped = [], [], []
     for key in keys:
@@ -265,7 +277,7 @@ def check(model=None, *, sequence=None, x=None, rules=None,
         cfg = getattr(model, 'cfg', None)
         target = getattr(cfg, 'name', None) or \
             (f'sequence {ctx.sequence_str()!r}' if sequence is not None
-             else 'model')
+             else 'trace' if trace is not None else 'model')
     report = AnalysisReport(findings=tuple(findings), checked=tuple(checked),
                             skipped=tuple(skipped), target=target)
     if strict:
@@ -526,6 +538,26 @@ def _rule_hlo_traffic(ctx: AnalysisContext, rule: AnalysisRule):
     return out
 
 
+def _rule_trace_invariants(ctx: AnalysisContext, rule: AnalysisRule):
+    """Runtime evidence: a recorded scheduler/export trace must satisfy the
+    span invariants (well-formed times, proper nesting, one batch at a
+    time per replica, and — with completions — every completion's latency
+    equal to its span tree's extent).  The static rules check graphs; this
+    one checks an execution actually recorded."""
+    from repro.obs.validate import check_trace
+    try:
+        violations = check_trace(ctx.trace, completions=ctx.completions)
+    except ValueError as e:               # torn async pair at load time
+        violations = [str(e)]
+    out = [rule.finding(v, where='trace') for v in violations]
+    n = len(getattr(ctx.trace, 'spans', ctx.trace)) \
+        if not isinstance(ctx.trace, (str, bytes)) else '?'
+    out.append(rule.finding(
+        f'{n} spans checked, {len(violations)} invariant violation(s)',
+        where='trace', severity='info'))
+    return out
+
+
 def _register_builtin_rules():
     for key, requires, doc, fn in (
         ('int8-residency', ('model', 'plan', 'input'),
@@ -553,6 +585,12 @@ def _register_builtin_rules():
          'optimized-HLO buffer bytes within 20% of the roofline-shared '
          'per-layer prediction (jnp backend)',
          _rule_hlo_traffic),
+        ('trace-invariants', ('trace',),
+         'a recorded runtime trace satisfies the span invariants: '
+         'well-formed nesting, serial per-replica execution, and '
+         'completion latencies that match their span extents '
+         '(repro.obs.check_trace)',
+         _rule_trace_invariants),
     ):
         register_rule(AnalysisRule(key=key, severity='error',
                                    requires=requires, doc=doc, fn=fn))

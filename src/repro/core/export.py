@@ -190,7 +190,36 @@ class LayerPlan:
             'fallback_mac_fraction': fallback / max(total, 1),
             'lowrank_selection': {n: e['selection'] for n, e in main.items()
                                   if e.get('selection')},
+            'lowering_cost_delta': self._lowering_cost_delta(main),
         }
+
+    @staticmethod
+    def _lowering_cost_delta(main) -> dict:
+        """Measured-vs-modeled lowering costs for every layer that a
+        measure-mode export timed (empty otherwise): how far off the
+        analytic ``lowering_costs`` block model was from the wall clock,
+        and whether both agree on the fused/chained winner — the feedback
+        loop that keeps the roofline model honest."""
+        out = {}
+        for n, e in main.items():
+            sel = e.get('selection') or {}
+            if 'modeled_fused_us' not in sel or 'fused_us' not in sel:
+                continue
+            model_choice = ('fused' if sel['modeled_fused_us']
+                            <= sel['modeled_chained_us'] else 'chained')
+            out[n] = {
+                'measured_fused_us': round(sel['fused_us'], 1),
+                'measured_chained_us': round(sel['chained_us'], 1),
+                'modeled_fused_us': round(sel['modeled_fused_us'], 1),
+                'modeled_chained_us': round(sel['modeled_chained_us'], 1),
+                'fused_measured_over_modeled': round(
+                    sel['fused_us'] / max(sel['modeled_fused_us'], 1e-9), 3),
+                'chained_measured_over_modeled': round(
+                    sel['chained_us'] / max(sel['modeled_chained_us'],
+                                            1e-9), 3),
+                'model_agrees': model_choice == sel['choice'],
+            }
+        return out
 
 
 def _compile_layer_plan(params, cfg, x, a_qmax, fuse_lowrank=True,
@@ -376,7 +405,7 @@ def _resolve_layer_params(params, name: str):
 
 
 def _measure_lowrank_selection(plan: LayerPlan, qparams, use_pallas: bool,
-                               *, reps: int = 3) -> None:
+                               *, reps: int = 3, tracer=None) -> None:
     """Resolve ``select_kernels='measure'``: wall-clock fused vs chained.
 
     For every factored conv inside the fused envelope, times both lowerings
@@ -384,8 +413,16 @@ def _measure_lowrank_selection(plan: LayerPlan, qparams, use_pallas: bool,
     timing is data-independent, best of ``reps`` after a compile warmup)
     and rewrites ``e['selection']`` / ``e['fused']`` with the measured
     winner, so the plan cannot ship a variant the machine just proved
-    slower.  Mutates the plan in place."""
+    slower.  Mutates the plan in place.
+
+    The modeled costs the analytic pricing produced survive as
+    ``modeled_fused_us``/``modeled_chained_us`` in the rewritten selection
+    (the summary's ``lowering_cost_delta`` block), and each timed launch
+    lands on ``tracer`` as a wall-clock ``kernel.launch`` span — the spans
+    ARE the measurement the decision is made from."""
     import time
+    from repro.obs.trace import as_tracer
+    tracer = as_tracer(tracer)
     qmax = plan.a_qmax
     for name, e in plan.layers.items():
         if e['kind'] != 'conv' or not e['factored']:
@@ -415,20 +452,30 @@ def _measure_lowrank_selection(plan: LayerPlan, qparams, use_pallas: bool,
                 out_scale=e['out_scale'], out_qmax=qmax,
                 use_pallas=use_pallas)
 
-        def best_us(f):
+        def best_us(f, variant):
             f().block_until_ready()      # compile outside the clock
             ts = []
-            for _ in range(reps):
+            for rep in range(reps):
                 t0 = time.perf_counter()
+                w0 = tracer.now()
                 f().block_until_ready()
-                ts.append((time.perf_counter() - t0) * 1e6)
+                us = (time.perf_counter() - t0) * 1e6
+                tracer.add('kernel.launch', w0, w0 + us * 1e-6,
+                           track='export', layer=name, variant=variant,
+                           rep=rep, us=round(us, 1))
+                ts.append(us)
             return min(ts)
 
-        tf, tc = best_us(fused), best_us(chained)
+        modeled = e['selection']          # the analytic pricing, pre-race
+        tf = best_us(fused, 'fused')
+        tc = best_us(chained, 'chained')
         e['selection'] = {'choice': 'fused' if tf <= tc else 'chained',
                           'why': (f'measured fused {tf:.0f}us vs chained '
                                   f'{tc:.0f}us'),
                           'fused_us': tf, 'chained_us': tc}
+        if 'fused_us' in modeled:         # keep the model's claim on record
+            e['selection']['modeled_fused_us'] = modeled['fused_us']
+            e['selection']['modeled_chained_us'] = modeled['chained_us']
         e['fused'] = tf <= tc
         e['launches'] = 1 if e['fused'] else 2
 
@@ -697,7 +744,7 @@ def calibrate_exit_threshold(model: ServingModel, x, quantile=0.5):
 
 def export_cnn(params, cfg, *, use_pallas=None, calibrate=None,
                fuse_lowrank=True, select_kernels='model',
-               verify=None) -> ServingModel:
+               verify=None, tracer=None) -> ServingModel:
     """Compile a (possibly chain-compressed) CNN to the int8 serving path.
 
     ``calibrate`` (a sample input batch) selects the int8-resident plan:
@@ -716,7 +763,14 @@ def export_cnn(params, cfg, *, use_pallas=None, calibrate=None,
     structured ``AnalysisReport`` lands on ``model.analysis`` and in
     ``model.summary()['analysis']``.  ``None`` (default) skips analysis —
     exports on hot paths (per-test, per-benchmark-variant) stay cheap.
+
+    ``tracer`` (a :class:`repro.obs.Tracer`) records the export timeline
+    on the wall clock: an ``export.calibrate`` span around the layer-plan
+    compile and, in measure mode, one ``kernel.launch`` span per timed
+    lowering rep.
     """
+    from repro.obs.trace import as_tracer
+    tracer = as_tracer(tracer)
     if verify not in (None, 'strict', 'warn'):
         raise ValueError(f"verify must be None, 'strict' or 'warn', "
                          f'got {verify!r}')
@@ -727,11 +781,15 @@ def export_cnn(params, cfg, *, use_pallas=None, calibrate=None,
     plan = None
     if calibrate is not None:
         a_qmax = 2.0 ** (a_bits - 1) - 1.0
-        plan = _compile_layer_plan(params, cfg, calibrate, a_qmax,
-                                   fuse_lowrank=fuse_lowrank,
-                                   select_kernels=select_kernels)
+        with tracer.span('export.calibrate', track='export',
+                         config=cfg.name, select_kernels=select_kernels,
+                         batch=int(calibrate.shape[0])):
+            plan = _compile_layer_plan(params, cfg, calibrate, a_qmax,
+                                       fuse_lowrank=fuse_lowrank,
+                                       select_kernels=select_kernels)
         if select_kernels == 'measure' and fuse_lowrank:
-            _measure_lowrank_selection(plan, qparams, use_pallas)
+            _measure_lowrank_selection(plan, qparams, use_pallas,
+                                       tracer=tracer)
         conv_fn, fc_fn, glue_fn, pool_fn = _resident_layers(
             plan, use_pallas, qparams=qparams)
         kw = dict(conv_fn=conv_fn, fc_fn=fc_fn, glue_fn=glue_fn,

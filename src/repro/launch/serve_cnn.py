@@ -57,7 +57,7 @@ def _measure_stage_costs(model, x, iters=5):
     return costs
 
 
-def _serve_trace(model, fam, cfg, args):
+def _serve_trace(model, fam, cfg, args, tracer=None):
     """--server mode: drive the request scheduler over a Poisson trace on
     the wall clock (cf. benchmarks/serving_load.py for the median-cost
     simulated A/B against static batching).  --deadline-ms adds the SLO
@@ -99,15 +99,17 @@ def _serve_trace(model, fam, cfg, args):
                 model, slots=args.slots, threshold=threshold,
                 stage_costs=costs, slo=slo, replicas=args.replicas,
                 min_replicas=args.replicas, max_replicas=args.max_replicas,
-                restore=lambda: model, restore_delay=costs[0], chaos=plan)
+                restore=lambda: model, restore_delay=costs[0], chaos=plan,
+                tracer=tracer)
         else:
             sched = ContinuousBatchScheduler(
                 model, slots=args.slots, threshold=threshold,
-                stage_costs=costs, max_wait=args.max_wait, slo=slo)
+                stage_costs=costs, max_wait=args.max_wait, slo=slo,
+                tracer=tracer)
     else:
         sched = ContinuousBatchScheduler(
             model, slots=args.slots, threshold=threshold,
-            max_wait=args.max_wait)
+            max_wait=args.max_wait, tracer=tracer)
     # warm EVERY stage program off the clock: threshold 2.0 means nothing
     # exits, so the warm batch traverses all segments (a real-threshold
     # warm-up could exit at head 1 and leave deeper segments uncompiled,
@@ -148,6 +150,13 @@ def _serve_trace(model, fam, cfg, args):
               f"straggler_flags={r['straggler_flags']} "
               f"evictions={r['evictions']} "
               f"peak_replicas={r['peak_replicas']}")
+    print('  ' + metrics.telemetry_digest())
+    if tracer is not None:
+        from repro.obs import check_trace
+        check_trace(tracer, completions, strict=True)
+        tracer.write(args.trace)
+        print(f'  trace: {len(tracer.spans)} spans -> {args.trace} '
+              f'(open at https://ui.perfetto.dev)')
 
 
 def main():
@@ -202,6 +211,10 @@ def main():
                          'fault plan (kill + straggler slowdown) and '
                          'report resilience counters; implies --server')
     ap.add_argument('--chaos-seed', type=int, default=0)
+    ap.add_argument('--trace', metavar='OUT.json', default=None,
+                    help='record a runtime trace (export spans + --server '
+                         'scheduler spans), validate its invariants, and '
+                         'write Chrome-trace JSON for Perfetto')
     ap.add_argument('--replicas', type=int, default=2,
                     help='--chaos: provisioned replica count')
     ap.add_argument('--max-replicas', type=int, default=4,
@@ -222,10 +235,14 @@ def main():
         trainer = Trainer(batch=args.batch, steps=args.steps)
         params, _ = trainer.fit(fam, cfg, params)
 
+    tracer = None
+    if args.trace:
+        from repro.obs import Tracer
+        tracer = Tracer()
     stream = fam.eval_batches(args.batches, args.batch)
     model = export_cnn(params, cfg, use_pallas=True if args.pallas else None,
                        calibrate=stream[0][0] if args.resident else None,
-                       verify=args.verify)
+                       verify=args.verify, tracer=tracer)
     if args.verify:
         # strict mode raised inside export_cnn already; print the report
         # (incl. info findings and visible skips) either way
@@ -237,7 +254,10 @@ def main():
               f'{s["n_depthwise"]} depthwise, '
               f'fallback MACs {s["fallback_mac_fraction"]:.1%}')
     if args.server:
-        return _serve_trace(model, fam, cfg, args)
+        return _serve_trace(model, fam, cfg, args, tracer=tracer)
+    if tracer is not None:       # batch mode: export spans only
+        tracer.write(args.trace)
+        print(f'trace: {len(tracer.spans)} spans -> {args.trace}')
     threshold = 0.85 if args.threshold is None else args.threshold
     # warm the jit caches off the clock
     model.serve_early_exit(stream[0][0], threshold=threshold)

@@ -1,0 +1,10 @@
+"""Runtime observability: span tracing (Chrome-trace export) and trace
+validation for the serving stack.  See serving/README.md (Observability)
+for the span taxonomy and clock semantics."""
+from repro.obs.trace import (NULL_TRACER, NullTracer, Span, Tracer,
+                             as_tracer, load_chrome_trace, spans_to_chrome)
+from repro.obs.validate import TraceInvariantError, check_trace
+
+__all__ = ['NULL_TRACER', 'NullTracer', 'Span', 'Tracer', 'as_tracer',
+           'load_chrome_trace', 'spans_to_chrome', 'TraceInvariantError',
+           'check_trace']

@@ -130,7 +130,7 @@ class ReplicaPoolScheduler(ContinuousBatchScheduler):
                  max_wait=None, slo=None, replicas=2, min_replicas=1,
                  max_replicas=8, spinup=0.0, restore=None,
                  restore_delay=0.0, chaos=None, straggler_threshold=1.5,
-                 evict_after=10 ** 9):
+                 evict_after=10 ** 9, tracer=None):
         if stage_costs is None:
             raise ValueError(
                 'ReplicaPoolScheduler needs stage_costs: the pool is '
@@ -138,7 +138,7 @@ class ReplicaPoolScheduler(ContinuousBatchScheduler):
                 'cannot run N replicas concurrently for real)')
         super().__init__(model, slots=slots, threshold=threshold,
                          stage_costs=stage_costs, max_wait=max_wait,
-                         slo=slo)
+                         slo=slo, tracer=tracer)
         if not 1 <= min_replicas <= max_replicas:
             raise ValueError('need 1 <= min_replicas <= max_replicas')
         self.stage_costs = [float(c) for c in stage_costs]
@@ -172,6 +172,10 @@ class ReplicaPoolScheduler(ContinuousBatchScheduler):
         metrics.record_event('failover', t, replica=repl.rid,
                              replaced=dead.rid, reason=reason,
                              n_replicas=len(self._live()))
+        if self.tracer.enabled:
+            self.tracer.add('failover.restore', t, t + self.restore_delay,
+                            track=f'replica{repl.rid}',
+                            replaced=dead.rid, reason=reason)
         return repl
 
     def _consume_kills(self, now, flights, metrics):
@@ -207,6 +211,9 @@ class ReplicaPoolScheduler(ContinuousBatchScheduler):
             metrics.record_event('kill', t, replica=rid,
                                  mid_batch=inflight is not None,
                                  reason=repr(fail))
+            if self.tracer.enabled:
+                self.tracer.instant('kill', t, track=f'replica{rid}',
+                                    mid_batch=inflight is not None)
             self._failover(victim, t, metrics, reason=repr(fail))
         self._kills = remaining
 
@@ -247,6 +254,8 @@ class ReplicaPoolScheduler(ContinuousBatchScheduler):
         if k == 0:
             for req, *_ in items:
                 req.t_start = now
+            if self.tracer.enabled:
+                self._trace_dispatch(items, now)
         batch = _gather_rows([(src, idx) for _, src, idx, *_ in items],
                              self.slots)
         out = jax.block_until_ready(replica.model.run_stage(k, batch))
@@ -265,17 +274,31 @@ class ReplicaPoolScheduler(ContinuousBatchScheduler):
         flights complete/promote exactly like the single-executor path,
         then feed the straggler monitor."""
         t = fl.t_land
+        track = f'replica{fl.replica.rid}'
         if fl.t_kill is not None:
+            if self.tracer.enabled:    # the truncated execution: no result
+                self.tracer.add('stage.exec', fl.t_start, t, track=track,
+                                stage=fl.k, live=len(fl.items),
+                                slots=self.slots, killed=True,
+                                rids=[it[0].rid for it in fl.items])
             for item in reversed(fl.items):
                 req = item[0]
                 if fl.k == 0:
                     req.t_start = None     # service restarts from scratch
+                    req.t_enqueued = t     # next queue span opens here
                     queue.requeue(req)
                 else:
                     pend[fl.k].appendleft(item)
             return
-        metrics.record_batch(fl.k, len(fl.items), self.slots)
-        self._land(fl.k, fl.items, fl.out, t, pend, completions, metrics)
+        if self.tracer.enabled:
+            self.tracer.add('stage.exec', fl.t_start, fl.t_end, track=track,
+                            stage=fl.k, live=len(fl.items),
+                            slots=self.slots,
+                            rids=[it[0].rid for it in fl.items])
+        metrics.record_batch(fl.k, len(fl.items), self.slots,
+                             t=fl.t_start, cost=fl.t_end - fl.t_start)
+        self._land(fl.k, fl.items, fl.out, t, pend, completions, metrics,
+                   track=track)
         expected = self.stage_costs[fl.k]
         ratio = (fl.t_end - fl.t_start) / max(expected, 1e-12)
         for action, rid in self.monitor.observe_one(fl.replica.rid, ratio):
@@ -304,7 +327,8 @@ class ReplicaPoolScheduler(ContinuousBatchScheduler):
                     kept.append(item)
                 elif j == 0:
                     self.slo.n_rejected += 1
-                    metrics.record_rejection(req.rid, now, 'missed')
+                    metrics.record_rejection(req.rid, now, 'missed',
+                                             t_arrival=req.t_arrival)
                 else:
                     self.slo.n_degraded += 1
                     self._complete(req, item[4], item[3], now, completions,
@@ -325,7 +349,8 @@ class ReplicaPoolScheduler(ContinuousBatchScheduler):
                 kept.append(item)
             elif k == 0:
                 self.slo.n_rejected += 1
-                metrics.record_rejection(req.rid, now, 'missed')
+                metrics.record_rejection(req.rid, now, 'missed',
+                                         t_arrival=req.t_arrival)
             else:
                 self.slo.n_degraded += 1
                 self._complete(req, item[4], item[3], now, completions,
@@ -342,6 +367,7 @@ class ReplicaPoolScheduler(ContinuousBatchScheduler):
         pend = [deque() for _ in range(self.n_segs)]
         completions, metrics = {}, ServingMetrics()
         self.pool, self._next_rid, self._seq = [], 0, 0
+        self._last_depth = None
         self._kills = sorted(self.chaos.kills)
         flights = []
         now = queue.next_arrival() or 0.0
@@ -365,6 +391,10 @@ class ReplicaPoolScheduler(ContinuousBatchScheduler):
             for r in queue.pop_ready(now, max(cap, 0)):
                 if self._admit(r, now, pend, metrics):
                     pend[0].append((r, r.x, None, None, None))
+            depth = len(pend[0]) + queue.n_ready(now)
+            if depth != getattr(self, '_last_depth', None):
+                metrics.record_gauge('queue_depth', now, depth)
+                self._last_depth = depth
             self._scale(pend, queue, flights, now, metrics)
             # dispatch: healthy free replicas first, stragglers last
             free = sorted((r for r in self._live() if r.free_at <= now),

@@ -29,12 +29,17 @@ class Request:
     ``deadline`` is absolute (same clock as ``t_arrival``); None = no SLO.
     ``t_start`` is written by the scheduler when the request first enters
     an executed segment-0 batch (service start; queue-wait ends here).
+    ``t_enqueued`` is the last time the request (re-)entered the queue —
+    ``None`` until a failover requeue stamps the kill time, so a traced
+    request's second ``request.queue`` span starts where its killed
+    dispatch ended instead of double-counting the original wait.
     """
     rid: int
     x: Any
     t_arrival: float = 0.0
     deadline: float | None = None
     t_start: float | None = None
+    t_enqueued: float | None = None
 
 
 @dataclass

@@ -61,6 +61,7 @@ import numpy as np
 
 from repro.core.export import exit_confidence
 from repro.kernels.tiling import batch_slots
+from repro.obs.trace import as_tracer
 from repro.serving.metrics import ServingMetrics
 from repro.serving.request import Completion, RequestQueue
 
@@ -152,7 +153,7 @@ class ContinuousBatchScheduler:
     """
 
     def __init__(self, model, *, slots=32, threshold=None, stage_costs=None,
-                 max_wait=None, slo=None):
+                 max_wait=None, slo=None, tracer=None):
         if not model.stage_fns:
             raise ValueError(
                 'model has no stage-split plan (exported without exit '
@@ -173,6 +174,8 @@ class ContinuousBatchScheduler:
             else:
                 slo.stage_costs = [None] * self.n_segs   # learn online
         self._clock = _Clock(stage_costs)
+        self.tracer = as_tracer(tracer)
+        self._track = 'executor0'          # the single-executor track
 
     # ---- scheduling policy: deepest full batch first, wait to fill when
     # arrivals are still coming, drain partial batches once they are not.
@@ -206,7 +209,8 @@ class ContinuousBatchScheduler:
         completions[req.rid] = c
         metrics.record_completion(c)
 
-    def _land(self, k, items, out, now, pend, completions, metrics):
+    def _land(self, k, items, out, now, pend, completions, metrics,
+              track=None):
         """Process segment ``k``'s output: complete confident exits,
         promote survivors (carry reference + their declined head's logits)
         to ``pend[k + 1]``.  Shared with the replica pool, which lands
@@ -216,17 +220,34 @@ class ContinuousBatchScheduler:
             s = self.model.stage_exits[k]
             conf = np.asarray(exit_confidence(exits[s]))
             head = np.asarray(exits[s], np.float32)
+            n_exit = 0
             for i, (req, *_) in enumerate(items):
                 if conf[i] > self.threshold:
+                    n_exit += 1
                     self._complete(req, head[i], s, now, completions,
                                    metrics)
                 else:                         # compact: reference the row
                     pend[k + 1].append((req, carry, i, s, head[i]))
+            if self.tracer.enabled:
+                self.tracer.instant(
+                    'compaction', now, track=track or self._track,
+                    stage=k, n_exit=n_exit, n_survive=len(items) - n_exit)
         else:
             logits = np.asarray(out, np.float32)
             for i, (req, *_) in enumerate(items):
                 self._complete(req, logits[i], -1, now, completions,
                                metrics)
+
+    def _trace_dispatch(self, items, now):
+        """Close each request's queue span: the wait ends NOW (the span
+        opened at arrival, or at the requeue after a failover kill)."""
+        for req, *_ in items:
+            t0 = (req.t_arrival if req.t_enqueued is None
+                  else req.t_enqueued)
+            self.tracer.async_span(
+                'request.queue', t0, now,
+                track=f'cohort{req.rid // self.slots}', cid=req.rid,
+                rid=req.rid, requeued=req.t_enqueued is not None)
 
     def _run_segment(self, k, pend, completions, metrics, now):
         items = [pend[k].popleft()
@@ -234,6 +255,8 @@ class ContinuousBatchScheduler:
         if k == 0:
             for req, *_ in items:
                 req.t_start = now             # service starts; wait ends
+            if self.tracer.enabled:
+                self._trace_dispatch(items, now)
         batch = _gather_rows([(src, idx) for _, src, idx, *_ in items],
                              self.slots)
         out = []
@@ -242,10 +265,16 @@ class ContinuousBatchScheduler:
             out.append(jax.block_until_ready(
                 self.model.run_stage(k, batch)))
         cost = self._clock.charge(k, execute)
+        if self.tracer.enabled:
+            self.tracer.add(
+                'stage.exec', now, now + cost, track=self._track, stage=k,
+                live=len(items), slots=self.slots,
+                rids=[r.rid for r, *_ in items])
         now += cost
         if self.slo is not None:
             self.slo.observe(k, cost)
-        metrics.record_batch(k, len(items), self.slots)
+        metrics.record_batch(k, len(items), self.slots, t=now - cost,
+                             cost=cost)
         self._land(k, items, out[0], now, pend, completions, metrics)
         return now
 
@@ -254,10 +283,19 @@ class ContinuousBatchScheduler:
     def _admit(self, r, now, pend, metrics) -> bool:
         if self.slo is None or r.deadline is None:
             return True
-        if self.slo.admit(r.deadline, now, len(pend[0]), self.slots):
+        ok, budget, need = self.slo.admit_explain(r.deadline, now,
+                                                  len(pend[0]), self.slots)
+        if ok:
             return True
         self.slo.n_rejected += 1
-        metrics.record_rejection(r.rid, now, 'admission')
+        metrics.record_rejection(r.rid, now, 'admission',
+                                 t_arrival=r.t_arrival)
+        if self.tracer.enabled:
+            self.tracer.instant('request.admit', now, track='scheduler',
+                                rid=r.rid, admitted=False,
+                                reason='admission',
+                                budget_s=round(budget, 6),
+                                need_s=round(need, 6))
         return False
 
     def _slo_degrade(self, pend, k_star, now, completions, metrics):
@@ -281,7 +319,12 @@ class ContinuousBatchScheduler:
                     pos += 1
                 elif j == 0:
                     self.slo.n_rejected += 1
-                    metrics.record_rejection(req.rid, now, 'missed')
+                    metrics.record_rejection(req.rid, now, 'missed',
+                                             t_arrival=req.t_arrival)
+                    if self.tracer.enabled:
+                        self.tracer.instant('request.admit', now,
+                                            track='scheduler', rid=req.rid,
+                                            admitted=False, reason='missed')
                 else:
                     self.slo.n_degraded += 1
                     self._complete(req, item[4], item[3], now, completions,
@@ -298,10 +341,15 @@ class ContinuousBatchScheduler:
         pend = [deque() for _ in range(self.n_segs)]
         completions, metrics = {}, ServingMetrics()
         now = queue.next_arrival() or 0.0
+        last_depth = None
         while queue or any(pend):
             for r in queue.pop_ready(now, self.slots - len(pend[0])):
                 if self._admit(r, now, pend, metrics):
                     pend[0].append((r, r.x, None, None, None))
+            depth = len(pend[0]) + queue.n_ready(now)
+            if depth != last_depth:
+                metrics.record_gauge('queue_depth', now, depth)
+                last_depth = depth
             k = self._pick(pend, more_arrivals=bool(queue), now=now)
             if self.slo is not None:
                 urgent = self.slo.urgent_segment(pend, now)
@@ -339,7 +387,8 @@ class StaticBatchScheduler:
     monolithic batch cost for the simulated clock (None = wall time).
     """
 
-    def __init__(self, model, *, slots=32, threshold=None, batch_cost=None):
+    def __init__(self, model, *, slots=32, threshold=None, batch_cost=None,
+                 tracer=None):
         if model.fn_exits is None:
             raise ValueError('model was exported without exit heads')
         self.model = model
@@ -347,6 +396,8 @@ class StaticBatchScheduler:
         self.threshold = (model.exit_threshold if threshold is None
                           else threshold)
         self._clock = _Clock(None if batch_cost is None else [batch_cost])
+        self.tracer = as_tracer(tracer)
+        self._track = 'executor0'
 
     def run_trace(self, requests):
         queue = RequestQueue(requests)
@@ -359,14 +410,26 @@ class StaticBatchScheduler:
                 ready += queue.pop_ready(now, self.slots - len(ready))
             for req in ready:
                 req.t_start = now
+                if self.tracer.enabled:
+                    self.tracer.async_span(
+                        'request.queue', req.t_arrival, now,
+                        track=f'cohort{req.rid // self.slots}',
+                        cid=req.rid, rid=req.rid)
             batch = _gather_rows([(r.x, None) for r in ready], self.slots)
             out = []
 
             def execute():
                 out.append(jax.block_until_ready(
                     self.model.fn_exits(self.model.params, batch)))
-            now += self._clock.charge(0, execute)
-            metrics.record_batch(0, len(ready), self.slots)
+            cost = self._clock.charge(0, execute)
+            if self.tracer.enabled:
+                self.tracer.add('stage.exec', now, now + cost,
+                                track=self._track, stage=0,
+                                live=len(ready), slots=self.slots,
+                                rids=[r.rid for r in ready])
+            now += cost
+            metrics.record_batch(0, len(ready), self.slots, t=now - cost,
+                                 cost=cost)
             logits, exits = out[0]
             stage, ans = exit_decisions(logits, exits, self.threshold)
             for i, req in enumerate(ready):

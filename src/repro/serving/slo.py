@@ -86,9 +86,18 @@ class SLOPolicy:
         still reach the first exit head by ``deadline``?  Budgets the
         segment-0 batches ahead of it plus one head-of-line blocking
         execution of any other segment."""
+        return self.admit_explain(deadline, now, backlog, slots)[0]
+
+    def admit_explain(self, deadline: float, now: float, backlog: int,
+                      slots: int) -> tuple[bool, float, float]:
+        """:meth:`admit` plus its evidence: ``(admitted, budget, need)``
+        — what the request had vs what the queue ahead of it costs.  The
+        observability layer records these on rejection instants so a
+        trace explains WHY a request was turned away."""
         batches = math.ceil((backlog + 1) / max(slots, 1))
         need = batches * self._cost(0) + self.max_cost
-        return deadline - now >= need
+        budget = deadline - now
+        return budget >= need, budget, need
 
     def latest_start(self, k: int, deadline: float) -> float:
         """Latest time segment ``k`` may start and still answer by

@@ -1,0 +1,143 @@
+"""ServingMetrics unit tests: percentile edge cases, summary JSON
+round-trip, the makespan-skew regression (a run whose earliest arrivals
+were all rejected must not report inflated throughput), and the windowed
+time-series / telemetry-digest layer the BENCH JSONs record."""
+import json
+
+import pytest
+
+from repro.serving import Completion, ServingMetrics, percentile
+
+
+def _comp(rid, t_arrival, t_done, *, t_start=None, exit_stage=0,
+          deadline=None, degraded=False):
+    return Completion(rid=rid, logits=None, pred=0, exit_stage=exit_stage,
+                      t_arrival=t_arrival, t_done=t_done, t_start=t_start,
+                      deadline=deadline, degraded=degraded)
+
+
+# ------------------------------------------------------------- percentile
+
+
+def test_percentile_edge_cases():
+    assert percentile([], 99) == 0.0
+    assert percentile([], 0) == 0.0
+    assert percentile([7.0], 0) == 7.0
+    assert percentile([7.0], 50) == 7.0
+    assert percentile([7.0], 100) == 7.0
+    xs = [4.0, 1.0, 3.0, 2.0]             # unsorted input must not matter
+    assert percentile(xs, 0) == 1.0
+    assert percentile(xs, 100) == 4.0
+    assert percentile(xs, 50) == pytest.approx(2.5)
+    assert percentile(xs, 25) == pytest.approx(1.75)   # linear interp
+    assert percentile(range(101), 99) == pytest.approx(99.0)
+    assert xs == [4.0, 1.0, 3.0, 2.0], 'input must not be mutated'
+
+
+# --------------------------------------------------- summary + round-trip
+
+
+def test_summary_json_roundtrip():
+    m = ServingMetrics()
+    for i in range(4):
+        m.record_completion(_comp(i, 0.001 * i, 0.01 + 0.002 * i,
+                                  t_start=0.005, deadline=1.0,
+                                  exit_stage=(0 if i < 2 else -1)))
+    m.record_batch(0, 4, 8, t=0.0, cost=4e-3)
+    m.record_batch(1, 2, 8, t=4e-3, cost=2e-3)
+    m.record_rejection(9, 0.02, 'admission', t_arrival=0.015)
+    m.record_event('kill', 0.01, replica=0, mid_batch=True)
+    m.record_event('scale_up', 0.012, n_replicas=3)
+    m.record_gauge('queue_depth', 0.0, 5)
+    s = m.summary()
+    s['timeseries'] = m.timeseries(n_windows=4)
+    got = json.loads(json.dumps(s))        # everything JSON-serializable
+    assert got == s
+    assert got['n_requests'] == 4
+    assert got['availability'] == pytest.approx(4 / 5)
+    assert got['slo']['n_with_deadline'] == 5   # deadline + rejection
+    assert got['resilience']['kills'] == 1
+    assert got['resilience']['peak_replicas'] == 3
+    assert got['timeseries']['n_windows'] == 4
+
+
+def test_makespan_counts_rejected_arrivals():
+    """Regression: the earliest request being REJECTED must still anchor
+    the makespan — otherwise throughput is computed over the shorter
+    completion-only window and reads too high."""
+    skew = ServingMetrics()
+    skew.record_rejection(0, t=0.0, reason='admission', t_arrival=0.0)
+    skew.record_completion(_comp(1, 1.0, 2.0))
+    assert skew.t_first_offered == 0.0
+    assert skew.summary()['throughput_rps'] == pytest.approx(1 / 2.0)
+    # without the arrival the old skew reappears (documented fallback:
+    # the rejection *decision* time still counts as offered)
+    legacy = ServingMetrics()
+    legacy.record_rejection(0, t=0.5, reason='admission')
+    legacy.record_completion(_comp(1, 1.0, 2.0))
+    assert legacy.summary()['throughput_rps'] == pytest.approx(1 / 1.5,
+                                                               abs=1e-3)
+    # all-completions runs are unchanged by the fix
+    plain = ServingMetrics()
+    plain.record_completion(_comp(0, 1.0, 2.0))
+    assert plain.summary()['throughput_rps'] == pytest.approx(1.0)
+
+
+# ------------------------------------------------------------ time series
+
+
+def test_timeseries_windows_and_gauges():
+    m = ServingMetrics()
+    assert m.timeseries() == {}            # no samples -> no block
+    # 2 completions early, 2 late; batches split 75/25 between stages
+    for rid, (t, lat) in enumerate([(0.1, 0.01), (0.2, 0.02),
+                                    (3.8, 0.04), (3.9, 0.08)]):
+        m.record_completion(_comp(rid, 0.0, t))
+        m.latencies[-1] = lat               # decouple latency from t_done
+        m.lat_samples[-1] = (t, lat)
+    m.record_batch(0, 8, 8, t=0.0, cost=3e-3)
+    m.record_batch(0, 6, 8, t=0.1, cost=3e-3)
+    m.record_batch(1, 4, 8, t=3.5, cost=2e-3)
+    m.record_gauge('queue_depth', 0.0, 2)
+    m.record_gauge('queue_depth', 1.0, 7)
+    ts = m.timeseries(n_windows=4)
+    assert ts['n_windows'] == 4
+    assert ts['window_s'] == pytest.approx(3.9 / 4)
+    assert ts['completions'] == [2, 0, 0, 2]
+    assert ts['rolling_p99_s'][1] is None, 'empty window is None, not 0'
+    assert ts['rolling_p99_s'][3] == pytest.approx(
+        percentile([0.04, 0.08], 99), abs=1e-6)
+    assert ts['occupancy'][0] == pytest.approx((1.0 + 0.75) / 2)
+    assert ts['occupancy'][3] == pytest.approx(0.5)
+    share = ts['stage_exec_share']
+    assert share['0'] == pytest.approx(6e-3 / 8e-3)
+    assert share['1'] == pytest.approx(2e-3 / 8e-3)
+    q = ts['queue_depth']
+    assert q['overall_peak'] == 7.0
+    assert q['peak'][0] == 2.0
+    assert q['peak'][1] == 7.0
+    assert q['peak'][3] == 7.0, 'gauges carry the last value forward'
+    worst = ts['worst_p99_window']
+    assert worst['p99_s'] == ts['rolling_p99_s'][3]
+    assert worst['t_start'] == pytest.approx(3 * 3.9 / 4)
+
+
+def test_timeseries_degenerate_span():
+    m = ServingMetrics()
+    m.record_completion(_comp(0, 0.0, 0.0))   # t0 == t1: no window span
+    assert m.timeseries() == {}
+    assert m.telemetry_digest() == 'telemetry: no timestamped samples'
+
+
+def test_telemetry_digest_mentions_all_parts():
+    m = ServingMetrics()
+    m.record_completion(_comp(0, 0.0, 1.0))
+    m.record_batch(0, 8, 8, t=0.0, cost=3e-3)
+    m.record_gauge('queue_depth', 0.1, 4)
+    m.record_event('scale_up', 0.5, n_replicas=3)
+    d = m.telemetry_digest()
+    assert d.startswith('telemetry: ')
+    assert 'peak queue depth 4' in d
+    assert 'worst p99' in d
+    assert 's0=100%' in d
+    assert 'peak replicas 3' in d
