@@ -50,6 +50,7 @@ def _cell(tagged):
 BENCH_TS = {
     'BENCH_load.json': ('static', 'compacting'),
     'BENCH_chaos.json': ('chaos_off', 'chaos_on', 'chaos_slo'),
+    'BENCH_pipeline.json': ('single', 'pipeline', 'pipeline_static'),
 }
 
 

@@ -76,6 +76,33 @@ print(f'trace smoke OK: {len(spans)} spans valid, '
       f'torn-span mutation caught ({len(torn)} violation(s))')
 PY
 
+# pipeline-parallel smoke, on 8 forced host devices (the benchmark
+# re-execs itself under the forced count; JAX_PLATFORMS=cpu keeps the
+# lane deterministic on any box): serves the same tiny trace through the
+# single-device scheduler and the placed pipeline, asserting every
+# request bit-exact vs the monolithic oracle and the recorded spans
+# (incl. transfer.carry) strictly valid.  Then the placement-consistency
+# rule is proven live: green on the pipeline's placed export, red on the
+# stage-assignment-dropping mutant.  Writes no BENCH file.
+JAX_PLATFORMS=cpu XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+    python benchmarks/serving_pipeline.py --smoke
+python - <<'PY'
+import jax
+from repro.analysis import check
+from repro.analysis.mutations import MUTANTS, _resnet_export
+
+model, _, _, x = _resnet_export(use_pallas=False, exits=True)
+placed = model.place_stages((jax.devices()[0],) * model.n_stages)
+clean = check(model=placed, x=x, rules=('placement-consistency',),
+              target='ci:placed-export')
+assert not any(f.severity == 'error' for f in clean.findings), clean
+red = check(**MUTANTS['placement-consistency']())
+errs = [f for f in red.findings if f.severity == 'error']
+assert errs, 'placement-consistency stayed green on its mutant'
+print(f'placement-consistency OK: clean export green, '
+      f'mutant red ({len(errs)} error finding(s))')
+PY
+
 # static-analysis gate (repro/analysis): every rule must be green on the
 # shipped exports of all three CNN kinds (both backends + the theoretical
 # sequence) AND red on its deliberately-mutated export — a rule that stops

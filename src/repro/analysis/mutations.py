@@ -105,6 +105,23 @@ def mutant_stage_carry():
             'target': 'mutant:stage-carry'}
 
 
+def mutant_placement_consistency():
+    """A placed stage-split export whose placement lost a stage: the last
+    segment has no assigned device (and no committed params copy) — the
+    exact inconsistency a buggy re-solve after a device kill would ship.
+    Works on a single local device: the clean placement pins every stage
+    to device 0, the mutant then truncates one assignment."""
+    from dataclasses import replace
+    model, _, _, x = _resnet_export(use_pallas=False, exits=True)
+    dev = jax.devices()[0]
+    placed = model.place_stages((dev,) * model.n_stages)
+    broken = replace(placed,
+                     stage_devices=placed.stage_devices[:-1] + (None,),
+                     stage_params=placed.stage_params[:-1] + (None,))
+    return {'model': broken, 'x': x, 'rules': ('placement-consistency',),
+            'target': 'mutant:placement-consistency'}
+
+
 def mutant_order_dag():
     """Quantization before pruning: 'QP' reverses the theoretical edge
     P→Q (neuron granularity precedes sub-neuron)."""
@@ -153,6 +170,7 @@ MUTANTS = {
     'launch-budget': mutant_launch_budget,
     'stage-carry': mutant_stage_carry,
     'order-dag': mutant_order_dag,
+    'placement-consistency': mutant_placement_consistency,
     'hlo-traffic': mutant_hlo_traffic,
     'trace-invariants': mutant_trace_invariants,
 }

@@ -47,7 +47,7 @@ from repro.analysis.walker import (pallas_call_name, pallas_call_vmem_bytes,
 #: What a rule may declare in ``requires`` — :meth:`AnalysisContext.has`
 #: answers each against the target.
 KNOWN_REQUIRES = ('model', 'plan', 'pallas', 'stages', 'sequence', 'input',
-                  'trace')
+                  'trace', 'placement')
 
 #: hlo-traffic: measured bytes may exceed the prediction by this fraction
 #: before the rule errors (the ISSUE's ">20% regression" threshold).
@@ -169,6 +169,8 @@ class AnalysisContext:
             return self.example_input() is not None
         if req == 'trace':
             return self.trace is not None
+        if req == 'placement':
+            return bool(getattr(self.model, 'stage_devices', None))
         raise ValueError(f'unknown requirement {req!r} '
                          f'(known: {KNOWN_REQUIRES})')
 
@@ -538,6 +540,64 @@ def _rule_hlo_traffic(ctx: AnalysisContext, rule: AnalysisRule):
     return out
 
 
+def _rule_placement_consistency(ctx: AnalysisContext, rule: AnalysisRule):
+    """A placed export (``ServingModel.place_stages``) is internally
+    consistent: every stage is assigned exactly one device, the committed
+    per-stage params actually live on their assigned devices, and every
+    *cross-device* stage edge streams an int8 QAct carry — the
+    pipeline-parallel scheduler's placement contract."""
+    from repro.core.export import QAct
+    out = []
+    model = ctx.model
+    sd = tuple(model.stage_devices)
+    n = model.n_stages
+    if len(sd) != n:
+        out.append(rule.finding(
+            f'placement assigns {len(sd)} of {n} stages — every stage '
+            f'must have exactly one device', where='placement'))
+    for i, d in enumerate(sd[:n]):
+        if d is None or isinstance(d, (tuple, list, set, frozenset)):
+            out.append(rule.finding(
+                f'stage {i} is assigned {d!r} — exactly one device per '
+                f'stage', where=f'stage{i}'))
+    sp = getattr(model, 'stage_params', None)
+    if sp is None or len(sp) != len(sd):
+        out.append(rule.finding(
+            'stage_devices declared but stage params are not committed '
+            'per stage (place_stages was bypassed)', where='placement'))
+    else:
+        for i, d in enumerate(sd[:n]):
+            if d is None or isinstance(d, (tuple, list, set, frozenset)):
+                continue
+            leaves = jax.tree_util.tree_leaves(sp[i])
+            devs = {dd for leaf in leaves[:1]
+                    for dd in getattr(leaf, 'devices', lambda: ())()}
+            if devs and devs != {d}:
+                out.append(rule.finding(
+                    f'stage {i} params committed to {sorted(map(str, devs))}'
+                    f' but the stage is placed on {d} — the segment would '
+                    f'execute off its assigned device', where=f'stage{i}'))
+    # cross-device edges: the streamed carry must be an int8 QAct
+    carry = ctx.example_input()
+    for i, fn in enumerate(model.stage_fns[:len(sd)]):
+        res = jax.eval_shape(fn, model.params, carry)
+        if i >= n - 1 or i + 1 >= len(sd):
+            break
+        _, carry = res
+        if sd[i] is sd[i + 1] or sd[i] == sd[i + 1]:
+            continue
+        if not isinstance(carry, QAct) or carry.q.dtype != jnp.int8:
+            dts = sorted({str(v.dtype)
+                          for v in jax.tree_util.tree_leaves(carry)})
+            out.append(rule.finding(
+                f'cross-device edge stage {i} ({sd[i]}) -> stage {i + 1} '
+                f'({sd[i + 1]}) streams {type(carry).__name__} of dtype '
+                f'{dts} — inter-device carries must be int8 QAct '
+                f'(fp32 quadruples the transfer bytes)',
+                where=f'stage{i}->stage{i + 1}'))
+    return out
+
+
 def _rule_trace_invariants(ctx: AnalysisContext, rule: AnalysisRule):
     """Runtime evidence: a recorded scheduler/export trace must satisfy the
     span invariants (well-formed times, proper nesting, one batch at a
@@ -585,6 +645,11 @@ def _register_builtin_rules():
          'optimized-HLO buffer bytes within 20% of the roofline-shared '
          'per-layer prediction (jnp backend)',
          _rule_hlo_traffic),
+        ('placement-consistency', ('model', 'stages', 'placement', 'input'),
+         'every stage of a placed export is assigned exactly one device, '
+         'stage params are committed where their stage runs, and every '
+         'cross-device stage edge streams an int8 QAct carry',
+         _rule_placement_consistency),
         ('trace-invariants', ('trace',),
          'a recorded runtime trace satisfies the span invariants: '
          'well-formed nesting, serial per-replica execution, and '

@@ -59,7 +59,7 @@ genuine int8 conv tiles are the TPU path (Mosaic-compiled Pallas kernels).
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
+from dataclasses import dataclass, replace
 from typing import Any, Callable
 
 import jax
@@ -673,6 +673,8 @@ class ServingModel:
     stage_exits: tuple = ()            # exit stage each segment ends at
     backend: str = 'jnp'               # 'pallas' | 'jnp' serving lowering
     analysis: Any = None               # AnalysisReport from export verify=
+    stage_devices: tuple = ()          # jax device pinned per segment
+    stage_params: tuple | None = None  # params committed to stage_devices
 
     def serve(self, x):
         return self.fn(self.params, x)
@@ -698,11 +700,43 @@ class ServingModel:
         """Run segment ``i`` of the stage-split plan.  ``carry`` is the
         input batch for ``i == 0``, else the carry segment ``i - 1``
         returned (int8 ``QAct`` on the resident plan).  Intermediate
-        segments return ``(exits, carry)``; the last returns logits."""
+        segments return ``(exits, carry)``; the last returns logits.
+        On a placed model (:meth:`place_stages`) the segment reads the
+        params copy committed to its device, so the computation runs
+        where the placement put it."""
         if not self.stage_fns:
             raise ValueError('model was exported without exit heads '
                              '(no stage boundaries to resume at)')
-        return self.stage_fns[i](self.params, carry)
+        params = (self.stage_params[i] if self.stage_params is not None
+                  else self.params)
+        return self.stage_fns[i](params, carry)
+
+    def place_stages(self, devices) -> 'ServingModel':
+        """Pin segment ``k`` to ``devices[k]`` (one jax device per stage).
+
+        Returns a NEW ServingModel whose ``stage_params[k]`` is the params
+        pytree committed to ``devices[k]`` via ``jax.device_put`` (one
+        transfer per *distinct* device — stages sharing a device share the
+        copy).  Because committed operands pin where jit runs, every
+        ``run_stage(k, ...)`` then executes on its assigned device; the
+        compiled math is unchanged, so answers stay bit-exact with the
+        unplaced model.  The int8 ``QAct`` carry between segments is NOT
+        moved here — streaming it across stage boundaries is the
+        scheduler's job (serving/placement.py)."""
+        if not self.stage_fns:
+            raise ValueError('model was exported without exit heads '
+                             '(no stages to place)')
+        devices = tuple(devices)
+        if len(devices) != self.n_stages:
+            raise ValueError(
+                f'need one device per stage: got {len(devices)} devices '
+                f'for {self.n_stages} stages')
+        per_dev = {}
+        for d in devices:
+            if d not in per_dev:
+                per_dev[d] = jax.device_put(self.params, d)
+        return replace(self, stage_devices=devices,
+                       stage_params=tuple(per_dev[d] for d in devices))
 
     def serve_stages(self, x):
         """Chain every stage segment: ``(logits, exits)``, value-identical

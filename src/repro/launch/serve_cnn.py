@@ -28,6 +28,19 @@ on a simulated clock built from locally measured stage costs.
 
     PYTHONPATH=src python -m repro.launch.serve_cnn --server \
         --requests 128 --deadline-ms 40 --chaos --replicas 2
+
+``--pipeline`` serves the trace pipeline-parallel across every visible
+jax device: the placement solver packs stage *k* onto a device by
+measured cost (greedy LPT, the reported load-balance bound), the int8
+carry streams between devices, and the run prints the placement next to
+the usual latency numbers.  Force a device count with
+``XLA_FLAGS=--xla_force_host_platform_device_count=8`` (the count is
+locked at backend init).  ``--chaos`` composes: a seeded device kill
+mid-trace, survivors re-solved.
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+        PYTHONPATH=src python -m repro.launch.serve_cnn --server \
+        --pipeline --requests 256 --rate 800 --slots 32
 """
 from __future__ import annotations
 
@@ -81,7 +94,7 @@ def _serve_trace(model, fam, cfg, args, tracer=None):
         deadlines = [float(ti) + args.deadline_ms * 1e-3 for ti in t]
     reqs = [Request(i, xs[i], float(t[i]), deadline=deadlines[i])
             for i in range(args.requests)]
-    simulated = args.chaos or args.deadline_ms is not None
+    simulated = args.chaos or args.deadline_ms is not None or args.pipeline
     if simulated:
         # the SLO layer and the replica pool need a deterministic clock:
         # measure per-segment batch costs locally and simulate on them
@@ -90,7 +103,23 @@ def _serve_trace(model, fam, cfg, args, tracer=None):
               + ' '.join(f'{c * 1e3:.2f}ms' for c in costs))
         slo = SLOPolicy(stage_costs=costs) \
             if args.deadline_ms is not None else None
-        if args.chaos:
+        if args.pipeline:
+            from repro.serving import PipelineParallelScheduler
+            plan = None
+            if args.chaos:
+                horizon = max(float(t[-1]),
+                              args.requests / args.slots * sum(costs))
+                plan = ChaosPlan.seeded(args.chaos_seed,
+                                        len(jax.devices()), horizon)
+            sched = PipelineParallelScheduler(
+                model, slots=args.slots, threshold=threshold,
+                stage_costs=costs, max_wait=args.max_wait, chaos=plan,
+                tracer=tracer)
+            p = sched.placement.summary()
+            print(f"placement over {p['n_devices']} devices: "
+                  f"{p['assignment']} loads={p['loads']} "
+                  f"balance={p['balance']} (LPT bound {p['bound']})")
+        elif args.chaos:
             horizon = max(float(t[-1]),
                           args.requests / args.slots * sum(costs)
                           / args.replicas)
@@ -206,6 +235,13 @@ def main():
                          'enables the SLO layer (deadline admission + '
                          'graceful degradation through the exit heads) on '
                          'a simulated clock from measured stage costs')
+    ap.add_argument('--pipeline', action='store_true',
+                    help='--server: pipeline-parallel over every visible '
+                         'jax device — the placement solver packs stages '
+                         'onto devices by measured cost, the int8 carry '
+                         'streams between them; implies --server '
+                         '(simulated clock); composes with --chaos '
+                         '(seeded device kill)')
     ap.add_argument('--chaos', action='store_true',
                     help='--server: run the replica pool under a seeded '
                          'fault plan (kill + straggler slowdown) and '
@@ -220,8 +256,11 @@ def main():
     ap.add_argument('--max-replicas', type=int, default=4,
                     help='--chaos: elastic scale-up ceiling')
     args = ap.parse_args()
-    if args.chaos:
+    if args.chaos or args.pipeline:
         args.server = True
+    if args.pipeline and args.deadline_ms is not None:
+        ap.error('--pipeline does not compose with --deadline-ms (the '
+                 'SLO layer lives in the replica pool)')
     if args.server or args.verify:
         args.resident = True
 

@@ -53,8 +53,8 @@ COUNTER = 'counter'    # sampled value (rendered as a counter track)
 
 # track-name prefix -> (pid, process name); unknown prefixes go to 'misc'
 _PID_GROUPS = (('replica', 1, 'serving'), ('executor', 1, 'serving'),
-               ('scheduler', 1, 'serving'), ('cohort', 2, 'requests'),
-               ('export', 3, 'export'))
+               ('device', 1, 'serving'), ('scheduler', 1, 'serving'),
+               ('cohort', 2, 'requests'), ('export', 3, 'export'))
 
 
 @dataclass(frozen=True)

@@ -35,7 +35,7 @@ import math
 from repro.obs.trace import ASYNC, SPAN, Span, Tracer, load_chrome_trace
 
 _EPS = 1e-9
-_EXEC_TRACKS = ('replica', 'executor')
+_EXEC_TRACKS = ('replica', 'executor', 'device')
 
 
 class TraceInvariantError(AssertionError):

@@ -11,10 +11,17 @@ checkpoints (``registry.py``), and the latency/throughput/occupancy/SLO/
 resilience metrics layer (``metrics.py``).  Driven by
 ``launch/serve_cnn.py --server`` and benchmarked (static batching vs
 early-exit compaction under a Poisson trace; ``--chaos`` for the
-resilience run) by ``benchmarks/serving_load.py``.  See ``README.md``
-in this package for the scheduler contract and failure model.
+resilience run) by ``benchmarks/serving_load.py``.  Pipeline-parallel
+multi-device serving (``placement.py``) packs each model's stages onto
+devices with a greedy-LPT cost solver and streams the int8 carry across
+stage boundaries; benchmarked by ``benchmarks/serving_pipeline.py``.
+See ``README.md`` in this package for the scheduler contract, failure
+model, and placement contract.
 """
 from repro.serving.metrics import ServingMetrics, percentile  # noqa: F401
+from repro.serving.placement import (Placement,  # noqa: F401
+                                     PipelineParallelScheduler, lpt_ratio,
+                                     pipeline_devices, solve_placement)
 from repro.serving.registry import ModelRegistry  # noqa: F401
 from repro.serving.replica import (ChaosPlan,  # noqa: F401
                                    ReplicaPoolScheduler)

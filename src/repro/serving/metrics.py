@@ -69,6 +69,7 @@ class ServingMetrics:
     batch_samples: list = field(default_factory=list)
     # ^ (t, stage_idx, live, slots, cost) — only when the scheduler passes t
     gauges: dict = field(default_factory=dict)    # name -> [(t, value)]
+    device_samples: list = field(default_factory=list)  # (t, cost, device)
     n_deadline: int = 0
     n_on_time: int = 0
     n_late: int = 0
@@ -102,11 +103,18 @@ class ServingMetrics:
 
     def record_batch(self, stage_idx: int, live: int, slots: int,
                      t: float | None = None,
-                     cost: float | None = None) -> None:
+                     cost: float | None = None,
+                     device: int | None = None) -> None:
+        """``device`` (the pipeline scheduler passes its device ordinal)
+        additionally feeds the per-device busy series behind
+        :meth:`device_occupancy`."""
         self.batches.append((stage_idx, live, slots))
         if t is not None:
             self.batch_samples.append((t, stage_idx, live, slots,
                                        0.0 if cost is None else cost))
+            if device is not None:
+                self.device_samples.append((t, 0.0 if cost is None
+                                            else cost, device))
 
     def record_rejection(self, rid: int, t: float, reason: str,
                          t_arrival: float | None = None) -> None:
@@ -260,6 +268,37 @@ class ServingMetrics:
                 't_end': round(t0 + (i + 1) * w, 6),
             }
         return out
+
+    def device_occupancy(self, n_windows: int = 24) -> dict:
+        """Per-device busy-fraction time series over the run window.
+
+        Each executed batch the scheduler tagged with a ``device``
+        contributes its ``[t, t + cost)`` interval to that device's busy
+        time; every window reports ``busy / window`` per device (a device
+        saturating a window reads 1.0).  Empty unless the scheduler
+        records device ordinals (the pipeline scheduler does)."""
+        if not self.device_samples:
+            return {}
+        t0 = (self.t_first_offered if self.t_first_offered is not None
+              else (self.t_first_arrival or 0.0))
+        t1 = max(self.t_last_done,
+                 max(t + c for t, c, _ in self.device_samples))
+        if t1 <= t0:
+            return {}
+        w = (t1 - t0) / n_windows
+        devices = sorted({d for _, _, d in self.device_samples})
+        busy = {d: [0.0] * n_windows for d in devices}
+        for t, cost, d in self.device_samples:
+            a, b = t, t + cost
+            i0 = max(0, int((a - t0) / w))
+            i1 = min(n_windows - 1, int((b - t0) / w))
+            for i in range(i0, i1 + 1):
+                lo, hi = t0 + i * w, t0 + (i + 1) * w
+                overlap = min(b, hi) - max(a, lo)
+                if overlap > 0:
+                    busy[d][i] += overlap
+        return {str(d): [round(v / w, 4) for v in busy[d]]
+                for d in devices}
 
     def telemetry_digest(self, n_windows: int = 24) -> str:
         """One line for benchmark logs: peak queue depth, worst rolling-p99

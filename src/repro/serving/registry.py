@@ -72,6 +72,50 @@ class ModelRegistry:
         self._models[name] = model
         return model
 
+    # ------------------------------------------------ multi-model placement
+
+    def plan_placement(self, n_devices: int, stage_costs: dict, *,
+                       seed: int = 0):
+        """Pack every registered model's stages onto ``n_devices``.
+
+        ``stage_costs`` maps model name -> measured per-stage batch costs
+        (each model at its own slot geometry — the cost IS the geometry's
+        price), covering every registered name.  Returns the greedy-LPT
+        :class:`~repro.serving.placement.Placement` over all N chains:
+        ``placement.device_of(stage, model=name)`` answers per model, and
+        ``placement.summary()`` reports the achieved per-device loads
+        against the LPT load-balance bound.
+        """
+        from repro.serving.placement import solve_placement
+        if not self._models:
+            raise ValueError('no models registered to place')
+        missing = [n for n in self.names() if n not in stage_costs]
+        if missing:
+            raise ValueError(f'stage_costs missing for registered '
+                             f'model(s) {missing}')
+        for name in self.names():
+            n_stages = self._models[name].n_stages
+            if len(stage_costs[name]) != n_stages:
+                raise ValueError(
+                    f'model {name!r}: {len(stage_costs[name])} stage '
+                    f'costs for {n_stages} stages')
+        return solve_placement(
+            {name: stage_costs[name] for name in self.names()},
+            n_devices, seed=seed)
+
+    def place(self, name: str, placement, devices):
+        """Apply a solved placement to a registered model: re-points the
+        entry at ``model.place_stages(...)`` with stage *k* pinned to
+        ``devices[placement.device_of(k, model=name)]``, and returns the
+        placed model.  ``devices`` is the ordinal->jax-device list the
+        placement was solved over."""
+        model = self.get(name)
+        placed = model.place_stages(tuple(
+            devices[placement.device_of(k, model=name)]
+            for k in range(model.n_stages)))
+        self._models[name] = placed
+        return placed
+
     def get(self, name: str):
         if name not in self._models:
             raise KeyError(f'no serving model {name!r} '

@@ -1,14 +1,11 @@
 """Expert-parallel MoE (shard_map) must be numerically identical to the
-dense single-device reference — run on 8 virtual host devices in a
-subprocess (device count is locked at jax init, so it cannot share this
-test process)."""
-import subprocess
-import sys
+dense single-device reference — run on 8 virtual host devices through
+the shared ``forced_devices`` subprocess fixture (the device count is
+locked at jax init, so multi-device tests cannot share this process)."""
 
 SCRIPT = r'''
-import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import jax, jax.numpy as jnp
+assert len(jax.devices()) == 8, f"expected 8 forced devices, got {len(jax.devices())}"
 from repro.configs import get_smoke_config
 from repro.models.moe import _moe_block_dense, moe_block, init_moe
 from repro.models.actsharding import make_mesh_policy, activation_sharding
@@ -45,12 +42,5 @@ raise SystemExit(bad)
 '''
 
 
-def test_moe_expert_parallel_matches_dense():
-    import os
-    env = dict(os.environ, PYTHONPATH='src')
-    env.pop('JAX_PLATFORMS', None)
-    r = subprocess.run([sys.executable, '-c', SCRIPT], env=env,
-                       capture_output=True, text=True, timeout=600,
-                       cwd=os.path.dirname(os.path.dirname(
-                           os.path.abspath(__file__))))
-    assert r.returncode == 0, f'stdout={r.stdout}\nstderr={r.stderr[-2000:]}'
+def test_moe_expert_parallel_matches_dense(forced_devices):
+    forced_devices(SCRIPT, n=8)

@@ -1,0 +1,215 @@
+"""Pipeline-parallel serving: the forced-8-device differential suite.
+
+The heart is one subprocess under ``XLA_FLAGS
+=--xla_force_host_platform_device_count=8`` (device count is locked at
+backend init — see conftest.force_host_device_count) that serves the
+same trace through the placed pipeline for all 3 CNN kinds (resnet,
+vgg, mobilenet) x {compacting, static-cohort} x a chaos device kill,
+asserting every request's logits and exit stage BIT-EXACT against the
+monolithic single-device ``fn_exits`` serving it alone at the same slot
+geometry — placement moves where stages run, never what they compute.
+Each run also validates its trace invariants and the
+placement-consistency analysis rule on the live placed model.
+
+In-process tests cover the conftest device-count guard (raises once the
+backend is up; a fresh subprocess proves the pre-init path), the
+registry's multi-model placement planning, and ``launch/mesh.py`` as
+consumed by serving placement (``pipeline_devices`` packs onto the data
+axes only).
+"""
+import subprocess
+import sys
+
+import pytest
+
+import conftest
+
+DIFFERENTIAL = r'''
+import jax, jax.numpy as jnp, numpy as np
+assert len(jax.devices()) == 8, f"expected 8 forced devices, got {len(jax.devices())}"
+from repro.configs.cnn import CNN_REGISTRY
+from repro.core.export import export_cnn, calibrate_exit_threshold
+from repro.core.family import CNNFamily
+from repro.data import SyntheticImages
+from repro.serving import (PipelineParallelScheduler, Request,
+                           exit_decisions)
+from repro.serving.replica import ChaosPlan
+from repro.obs import Tracer, check_trace
+from repro.analysis import check as analyze
+
+SLOTS, N = 8, 16
+for kind in ('resnet8-cifar', 'vgg8-cifar', 'mobilenet-small-cifar'):
+    fam = CNNFamily(SyntheticImages())
+    cfg = CNN_REGISTRY[kind].replace(w_bits=8, a_bits=8)
+    params = fam.init(jax.random.key(0), cfg)
+    params, cfg = fam.add_exits(jax.random.key(1), params,
+                                cfg.replace(exit_stages=()),
+                                fam.default_exit_points(cfg))
+    cfg = cfg.replace(w_bits=8, a_bits=8)
+    xs = jax.random.normal(jax.random.key(7), (N, 32, 32, 3))
+    calib = jax.random.normal(jax.random.key(8), (SLOTS, 32, 32, 3))
+    model = export_cnn(params, cfg, use_pallas=False, calibrate=calib)
+    thr = calibrate_exit_threshold(model, calib)
+    # synthetic per-stage costs: bit-exactness cannot depend on the
+    # simulated clock, only the batches executed on it are real
+    costs = [1e-3 * (model.n_stages - k) for k in range(model.n_stages)]
+    t = np.cumsum(np.full(N, 2e-4))
+    trace = [Request(i, xs[i], float(t[i])) for i in range(N)]
+    oracle = {}
+    for r in trace:
+        xb = jnp.concatenate([r.x[None], jnp.zeros((SLOTS - 1,) + r.x.shape,
+                                                   r.x.dtype)])
+        logits, exits = model.fn_exits(model.params, xb)
+        stage, ans = exit_decisions(logits, exits, thr)
+        oracle[r.rid] = (int(stage[0]), np.asarray(ans[0]))
+    makespan = None
+    for mode, compact, chaos in (('compacting', True, False),
+                                 ('static', False, False),
+                                 ('chaos', True, True)):
+        plan = (ChaosPlan(kills=((0.4 * makespan, None),)) if chaos
+                else None)
+        tr = Tracer()
+        sch = PipelineParallelScheduler(
+            model, slots=SLOTS, threshold=thr, stage_costs=costs,
+            compact=compact, chaos=plan, tracer=tr)
+        comp, met = sch.run_trace(trace)
+        assert len(comp) == N, (kind, mode, len(comp))
+        for r in trace:
+            st, ans = oracle[r.rid]
+            c = comp[r.rid]
+            assert c.exit_stage == st and np.array_equal(
+                np.asarray(c.logits), ans), \
+                f"{kind}/{mode}: request {r.rid} diverged from monolithic"
+        assert len(set(sch.stage_dev)) > 1, (kind, "placement collapsed")
+        v = check_trace(tr, comp)
+        assert not v, (kind, mode, v[:4])
+        rep = analyze(model=sch.model, x=calib,
+                      rules=("placement-consistency",),
+                      target=f"{kind}:{mode}")
+        assert not [f for f in rep.findings if f.severity == "error"], \
+            (kind, mode, [f.message for f in rep.findings])
+        if chaos:
+            assert any(e[0] == "kill" for e in met.events), \
+                (kind, "no kill fired")
+            assert sum(e[0] == "placement" for e in met.events) >= 2, \
+                (kind, "no re-solve after the kill")
+        else:
+            assert any(s.name == "transfer.carry" for s in tr.spans), \
+                (kind, mode, "no cross-device carry transfer")
+        if makespan is None:
+            makespan = max(c.t_done for c in comp.values())
+        print(f"{kind} {mode}: bit-exact ({len(tr.spans)} spans)")
+print("DIFFERENTIAL-OK")
+'''
+
+
+def test_pipeline_bit_exact_all_kinds_forced_8_devices(forced_devices):
+    r = forced_devices(DIFFERENTIAL, n=8, timeout=900)
+    assert 'DIFFERENTIAL-OK' in r.stdout
+
+
+MESH = r'''
+import jax, numpy as np
+assert len(jax.devices()) == 8
+from repro.launch.mesh import data_axes
+from repro.serving import pipeline_devices, solve_placement
+mesh = jax.make_mesh((4, 2), ('data', 'model'))
+assert data_axes(mesh) == ('data',)
+devs = pipeline_devices(mesh)
+assert len(devs) == 4, devs
+assert devs == tuple(np.asarray(mesh.devices)[:, 0].reshape(-1))
+full = pipeline_devices()
+assert len(full) == 8 and set(devs) <= set(full)
+pod = jax.make_mesh((2, 2, 2), ('pod', 'data', 'model'))
+assert len(pipeline_devices(pod)) == 4          # pod x data, model sliced
+p = solve_placement([5.0, 3.0, 2.0, 1.0], len(devs))
+assert {d for _, d in p.assignment} <= set(range(4))
+assert len({k for k, _ in p.assignment}) == 4   # every stage placed
+print("MESH-OK")
+'''
+
+
+def test_mesh_placement_under_forced_devices(forced_devices):
+    r = forced_devices(MESH, n=8, timeout=300)
+    assert 'MESH-OK' in r.stdout
+
+
+def test_pipeline_devices_local_mesh():
+    import jax
+
+    from repro.launch.mesh import make_local_mesh
+    from repro.serving import pipeline_devices
+    assert pipeline_devices(make_local_mesh()) == (jax.devices()[0],)
+    assert pipeline_devices() == tuple(jax.devices())
+
+
+def test_registry_plans_multi_model_placement():
+    from types import SimpleNamespace
+
+    from repro.serving import ModelRegistry
+    reg = ModelRegistry()
+    reg.register('a', SimpleNamespace(n_stages=2))
+    reg.register('b', SimpleNamespace(n_stages=3))
+    p = reg.plan_placement(4, {'a': [4.0, 1.0], 'b': [2.0, 2.0, 1.0]})
+    assert len({k for k, _ in p.assignment}) == 5     # every (model, stage)
+    assert p.device_of(0, model='a') in range(4)
+    assert abs(sum(p.loads) - 10.0) < 1e-9
+    with pytest.raises(ValueError, match='missing'):
+        reg.plan_placement(4, {'a': [1.0, 1.0]})
+    with pytest.raises(ValueError, match='stage'):
+        reg.plan_placement(4, {'a': [1.0], 'b': [1.0, 1.0, 1.0]})
+
+
+def test_registry_place_commits_stage_devices():
+    import jax
+
+    from repro.analysis.mutations import _resnet_export
+    from repro.serving import ModelRegistry
+    model, _, _, x = _resnet_export(use_pallas=False, exits=True)
+    reg = ModelRegistry()
+    reg.register('cnn', model)
+    p = reg.plan_placement(1, {'cnn': [3.0, 2.0, 1.0]})
+    placed = reg.place('cnn', p, jax.devices())
+    assert placed.stage_devices == (jax.devices()[0],) * model.n_stages
+    assert placed.stage_params is not None
+    assert reg.get('cnn') is placed          # registry entry re-pointed
+    jax.block_until_ready(placed.run_stage(0, x))
+
+
+def test_force_guard_raises_after_backend_init():
+    """The regression the conftest guard exists for: once jax's backend
+    is up, forcing a device count must be a loud error, not a silent
+    no-op XLA_FLAGS edit."""
+    import jax
+    jax.devices()                              # ensure the backend is up
+    assert conftest.backend_initialized()
+    with pytest.raises(RuntimeError, match='already initialized'):
+        conftest.force_host_device_count(8)
+
+
+GUARD = r'''
+import sys
+sys.path.insert(0, "tests")
+import conftest
+assert not conftest.backend_initialized()
+conftest.force_host_device_count(5)
+import jax
+assert len(jax.devices()) == 5, len(jax.devices())
+assert conftest.backend_initialized()
+try:
+    conftest.force_host_device_count(6)
+except RuntimeError:
+    print("GUARD-OK")
+else:
+    raise SystemExit("guard failed to fire after backend init")
+'''
+
+
+def test_force_guard_subprocess_pre_and_post_init():
+    env = conftest.forced_device_env(1)
+    env.pop('XLA_FLAGS', None)         # the script forces its own count
+    r = subprocess.run([sys.executable, '-c', GUARD], env=env,
+                       capture_output=True, text=True, timeout=300,
+                       cwd=conftest.REPO_ROOT)
+    assert r.returncode == 0, f'stdout={r.stdout}\nstderr={r.stderr[-2000:]}'
+    assert 'GUARD-OK' in r.stdout

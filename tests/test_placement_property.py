@@ -1,0 +1,103 @@
+"""Hypothesis property sweep for the pipeline placement solver.
+
+Kept separate from test_pipeline_parallel.py so the differential suite
+still collects when hypothesis is not installed (the dep lives in
+requirements-dev.txt).  The solver is pure — no jax, no devices — so
+these sweeps are cheap and wide:
+
+* every ``(model, stage)`` pair gets exactly one device in range;
+* the achieved ``max_load`` never exceeds the SOUND greedy guarantee
+  ``total/M + c_max`` (the classic 4/3 LPT ratio bounds OPT, not the
+  achieved load — costs [3, 3, 3] on 2 devices packs to 6 > 4/3-of-OPT-
+  lower-bound, so that is deliberately NOT asserted here);
+* loads conserve the total cost and ``opt_lower <= max_load``;
+* fixed seed => identical placement (re-solves after a device kill must
+  be reproducible);
+* degenerate inputs (one device, more stages than devices, zero-cost
+  stages) solve rather than crash.
+"""
+import pytest
+
+pytest.importorskip('hypothesis')
+
+from hypothesis import given, settings, strategies as st     # noqa: E402
+
+from repro.serving.placement import (DEFAULT_MODEL,          # noqa: E402
+                                     lpt_ratio, solve_placement)
+
+costs_st = st.lists(st.floats(0.0, 1e4, allow_nan=False,
+                              allow_infinity=False),
+                    min_size=1, max_size=24)
+
+
+@settings(max_examples=200, deadline=None)
+@given(costs=costs_st, n=st.integers(1, 12), seed=st.integers(0, 2**31 - 1))
+def test_every_stage_placed_within_guarantee(costs, n, seed):
+    p = solve_placement(costs, n, seed=seed)
+    assert p.n_devices == n
+    placed = dict(p.assignment)
+    assert set(placed) == {(DEFAULT_MODEL, k) for k in range(len(costs))}
+    assert all(0 <= d < n for d in placed.values())
+    total = sum(costs)
+    tol = 1e-9 * max(1.0, total)
+    assert abs(sum(p.loads) - total) <= tol          # cost conserved
+    assert p.max_load <= p.guarantee + tol           # sound greedy bound
+    assert p.opt_lower <= p.max_load + tol           # lower-bounds OPT
+    assert p.bound >= p.opt_lower - tol              # ratio >= 1
+    assert abs(p.guarantee - (total / n + max(costs))) <= tol
+
+
+@settings(max_examples=100, deadline=None)
+@given(costs=costs_st, n=st.integers(1, 12), seed=st.integers(0, 2**31 - 1))
+def test_deterministic_under_fixed_seed(costs, n, seed):
+    a = solve_placement(costs, n, seed=seed)
+    b = solve_placement(costs, n, seed=seed)
+    assert a.assignment == b.assignment and a.loads == b.loads
+
+
+@settings(max_examples=100, deadline=None)
+@given(models=st.dictionaries(
+           st.sampled_from(['cnn-a', 'cnn-b', 'cnn-c']),
+           st.lists(st.floats(0.0, 100.0), min_size=1, max_size=6),
+           min_size=1, max_size=3),
+       n=st.integers(1, 8))
+def test_multi_model_packing(models, n):
+    p = solve_placement(models, n)
+    keys = {(m, k) for m, cs in models.items() for k in range(len(cs))}
+    assert set(dict(p.assignment)) == keys
+    for m, cs in models.items():
+        for k in range(len(cs)):
+            assert 0 <= p.device_of(k, model=m) < n
+    total = sum(sum(cs) for cs in models.values())
+    assert p.max_load <= total / n + max(
+        c for cs in models.values() for c in cs) + 1e-9 * max(1.0, total)
+
+
+def test_degenerate_cases_solve():
+    one = solve_placement([5.0, 1.0, 2.0], 1)
+    assert one.loads == (8.0,) and one.balance == 1.0
+    crowded = solve_placement(list(range(1, 20)), 3)
+    assert len(crowded.assignment) == 19
+    zeros = solve_placement([0.0, 0.0, 0.0], 4)
+    assert zeros.max_load == 0.0 and zeros.balance == 1.0
+    single = solve_placement([7.0], 8)
+    assert single.max_load == 7.0 and single.opt_lower == 7.0
+
+
+def test_invalid_inputs_raise():
+    with pytest.raises(ValueError):
+        solve_placement([1.0], 0)
+    with pytest.raises(ValueError):
+        solve_placement([], 2)
+    with pytest.raises(ValueError):
+        solve_placement([1.0, -2.0], 2)
+    with pytest.raises(ValueError):
+        solve_placement([float('nan')], 2)
+    with pytest.raises(ValueError):
+        solve_placement({'a': []}, 2)
+
+
+def test_lpt_ratio_monotone():
+    assert lpt_ratio(1) == 1.0
+    rs = [lpt_ratio(n) for n in range(1, 16)]
+    assert rs == sorted(rs) and all(r < 4 / 3 for r in rs)
